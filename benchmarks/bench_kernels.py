@@ -1,0 +1,49 @@
+"""Kernel micro-benchmarks: Pallas FWHT (interpret mode on CPU — numbers
+measure the validation path, not TPU perf) vs dense-matmul and jnp-butterfly
+encodes, plus the fused coded combine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.encoding import hadamard_matrix
+from repro.kernels.fwht import fwht_kernel_call
+from repro.kernels.ref import fwht_ref
+from repro.kernels.coded_reduce import coded_combine_call
+from repro.kernels.ref import coded_combine_ref
+from .common import emit, time_us
+
+
+def run(rows: int = 64, n: int = 1024):
+    x = jax.random.normal(jax.random.key(0), (rows, n))
+    H = jnp.asarray(hadamard_matrix(n), jnp.float32)
+
+    dense = jax.jit(lambda t: t @ H.T)
+    ref = jax.jit(fwht_ref)
+    pallas_i = lambda t: fwht_kernel_call(t, interpret=True)
+
+    us_dense = time_us(dense, x)
+    us_ref = time_us(ref, x)
+    us_pallas = time_us(pallas_i, x, iters=2)
+    flops_dense = 2 * rows * n * n
+    ops_fwht = rows * n * np.log2(n)
+    emit("fwht_dense_matmul", us_dense,
+         f"gflops={flops_dense / us_dense / 1e3:.2f}")
+    emit("fwht_jnp_butterfly", us_ref,
+         f"gops={ops_fwht / us_ref / 1e3:.2f}")
+    emit("fwht_pallas_interpret", us_pallas, "validation_path")
+
+    g = jax.random.normal(jax.random.key(1), (16, 1 << 16))
+    c = jax.random.uniform(jax.random.key(2), (16,))
+    us_ref2 = time_us(jax.jit(coded_combine_ref), g, c)
+    us_k = time_us(lambda a, b: coded_combine_call(a, b, interpret=True),
+                   g, c, iters=2)
+    emit("coded_combine_jnp", us_ref2,
+         f"gbps={(g.size * 4) / us_ref2 / 1e3:.2f}")
+    emit("coded_combine_pallas_interpret", us_k, "validation_path")
+    return {}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: timing + CSV emission + scheme definitions."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def time_us(fn, *args, iters: int = 5, warmup: int = 1, **kw) -> float:
+    for _ in range(warmup):
+        fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    # block on jax outputs if present
+    try:
+        import jax
+        jax.block_until_ready(out)
+    except Exception:
+        pass
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def masks_from_delays(model, m, k, steps, seed=0):
+    from repro.core import simulate_run, active_mask
+    masks, times = [], []
+    for _, A, t in simulate_run(model, m, k, steps, seed=seed):
+        masks.append(active_mask(m, A))
+        times.append(t)
+    return np.stack(masks), np.asarray(times)

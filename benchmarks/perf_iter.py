@@ -1,0 +1,59 @@
+"""§Perf hillclimb driver: run one (arch, shape) dry-run with config
+overrides and print the roofline terms compactly (+ hotspots on demand).
+
+  PYTHONPATH=src python -m benchmarks.perf_iter --arch starcoder2-3b \
+      --shape prefill_32k --override '{"seq_parallel_attn": true}' --hotspots
+
+Appends one CSV row per invocation to runs/perf_log.csv.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import csv
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--override", default="{}")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--hotspots", action="store_true")
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--log", default="runs/perf_log.csv")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import dryrun_one
+    rec = dryrun_one(args.arch, args.shape, args.multi, verbose=False,
+                     extra_overrides=json.loads(args.override),
+                     hotspots=args.hotspots)
+    rl = rec["roofline"]
+    row = {
+        "tag": args.tag or args.override,
+        "arch": args.arch, "shape": args.shape,
+        "compute_s": round(rl["compute_s"], 3),
+        "memory_s": round(rl["memory_s"], 3),
+        "collective_s": round(rl["collective_s"], 3),
+        "bottleneck": rl["bottleneck"],
+        "useful_ratio": round(rl.get("useful_ratio", 0), 4),
+        "allgather_GB": round(rec["collectives"]["all-gather"] / 1e9, 1),
+        "allreduce_GB": round(rec["collectives"]["all-reduce"] / 1e9, 1),
+        "a2a_GB": round(rec["collectives"]["all-to-all"] / 1e9, 1),
+        "permute_GB": round(
+            rec["collectives"]["collective-permute"] / 1e9, 1),
+        "compile_s": rec["compile_s"],
+    }
+    print(json.dumps(row, indent=1))
+    os.makedirs(os.path.dirname(args.log), exist_ok=True)
+    exists = os.path.exists(args.log)
+    with open(args.log, "a", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(row))
+        if not exists:
+            w.writeheader()
+        w.writerow(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Render the §Roofline table from dry-run JSON artifacts.
+
+  PYTHONPATH=src python -m benchmarks.roofline --dir runs/dryrun [--md]
+
+Reads every <arch>__<shape>__<mesh>.json emitted by repro.launch.dryrun and
+prints the three roofline terms, dominant bottleneck, MODEL_FLOPS ratio and
+memory footprint per combo.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def load_records(d: str):
+    recs = []
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            with open(os.path.join(d, f)) as fh:
+                recs.append(json.load(fh))
+    return recs
+
+
+def fmt_row(r: dict, md: bool = False):
+    if "error" in r:
+        cells = [r["arch"], r["shape"], r.get("mesh", "?"), "ERROR",
+                 r["error"][:40], "", "", "", ""]
+    else:
+        rl = r["roofline"]
+        mem_gb = (r["memory"]["argument_bytes_per_device"]
+                  + r["memory"]["temp_bytes_per_device"]) / 2 ** 30
+        cells = [
+            r["arch"], r["shape"], r["mesh"],
+            f"{rl['compute_s'] * 1e3:.2f}", f"{rl['memory_s'] * 1e3:.2f}",
+            f"{rl['collective_s'] * 1e3:.2f}", rl["bottleneck"],
+            f"{rl.get('useful_ratio', 0):.3f}", f"{mem_gb:.1f}",
+        ]
+    sep = " | " if md else ","
+    line = sep.join(str(c) for c in cells)
+    return ("| " + line + " |") if md else line
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="runs/dryrun")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    recs = load_records(args.dir)
+    hdr = ["arch", "shape", "mesh", "compute_ms", "memory_ms",
+           "collective_ms", "bottleneck", "useful_ratio", "mem_GB/dev"]
+    if args.md:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+    else:
+        print(",".join(hdr))
+    for r in recs:
+        print(fmt_row(r, args.md))
+    ok = sum(1 for r in recs if "error" not in r)
+    print(f"{'<!-- ' if args.md else '# '}{ok}/{len(recs)} combos lowered "
+          f"and compiled{' -->' if args.md else ''}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Roofline terms come from the
+dry-run artifacts (launch/dryrun.py writes JSON; benchmarks/roofline.py
+renders the table) since they require the 512-device process.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (bench_spectrum, bench_ridge, bench_lasso, bench_logistic,
+                   bench_matrix_factorization, bench_kernels, bench_coded_lm)
+    print("name,us_per_call,derived")
+    suites = [
+        ("spectrum (paper Figs 5-6)", bench_spectrum.run),
+        ("ridge L-BFGS (paper Fig 7)", bench_ridge.run),
+        ("lasso proximal (paper Fig 14)", bench_lasso.run),
+        ("logistic BCD (paper Figs 10-13)", bench_logistic.run),
+        ("matrix factorization (paper Tables 2-3)",
+         bench_matrix_factorization.run),
+        ("coded-DP LM trainer (beyond-paper, DESIGN §4)", bench_coded_lm.run),
+        ("kernels", bench_kernels.run),
+    ]
+    t_all = time.time()
+    for title, fn in suites:
+        print(f"# --- {title} ---", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{title.split()[0]}_FAILED,0.0,{e!r}", flush=True)
+            import traceback
+            traceback.print_exc()
+        print(f"# ({title}: {time.time() - t0:.1f}s)", flush=True)
+    print(f"# total: {time.time() - t_all:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

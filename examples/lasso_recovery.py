@@ -1,0 +1,34 @@
+"""LASSO sparsity recovery under stragglers (paper §5.4, Fig 14):
+encoded proximal gradient (ISTA) with Steiner-ETF encoding vs the uncoded
+fastest-k baseline, under an ADVERSARIAL erasure schedule.
+
+  PYTHONPATH=src python examples/lasso_recovery.py
+"""
+import numpy as np
+
+from repro.core import (make_encoder, pad_rows, make_encoded_problem,
+                        run_encoded_proximal, adversarial_sets, active_mask)
+from repro.data import lsq_dataset
+
+
+def f1_score(w_hat, w_true, tol=1e-3):
+    nz_h, nz_t = np.abs(w_hat) > tol, np.abs(w_true) > 0
+    tp = (nz_h & nz_t).sum()
+    prec = tp / max(nz_h.sum(), 1)
+    rec = tp / max(nz_t.sum(), 1)
+    return 2 * prec * rec / max(prec + rec, 1e-9)
+
+
+m, k, steps = 16, 12, 300
+n, p, s = 512, 256, 20
+X, y, w_true = lsq_dataset(n, p, noise=0.4, sparse=s, seed=0)
+L = float(np.linalg.eigvalsh(X.T @ X / n).max())
+masks = np.stack([active_mask(m, A) for A in adversarial_sets(m, k, steps)])
+
+for name in ["uncoded", "replication", "steiner", "hadamard"]:
+    enc = pad_rows(make_encoder(
+        name, n, beta=1.0 if name == "uncoded" else 2.0), m)
+    prob = make_encoded_problem(X, y, enc, m, lam=0.08)
+    w, tr = run_encoded_proximal(prob, masks, step_size=0.5 / L)
+    print(f"{name:12s} F1={f1_score(np.asarray(w), w_true):.3f} "
+          f"final_obj={tr[-1]:.4f}")

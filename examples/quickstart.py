@@ -1,0 +1,41 @@
+"""Quickstart: encoded distributed ridge regression in ~40 lines.
+
+The master waits for the fastest k of m workers every iteration; the
+Hadamard encoding makes the fastest-k gradient a faithful estimate of the
+full gradient regardless of WHICH workers straggle.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (hadamard_encoder, make_encoded_problem,
+                        run_encoded_gd, original_objective,
+                        bimodal_delays, simulate_run, active_mask)
+from repro.data import lsq_dataset
+
+m, k = 16, 12           # 16 workers, wait for the fastest 12
+n, p = 512, 128
+
+# 1. data + encoding: workers store S_i X rather than X_i  (beta = 2)
+X, y, _ = lsq_dataset(n, p, noise=0.5, seed=0)
+enc = hadamard_encoder(n, beta=2.0)
+prob = make_encoded_problem(X, y, enc, m, lam=0.05)
+
+# 2. simulate stragglers (bimodal delays from the paper) -> per-step masks
+masks = np.stack([active_mask(m, A)
+                  for _, A, _ in simulate_run(bimodal_delays(), m, k, 200)])
+
+# 3. run encoded gradient descent, obliviously to the erasures
+L = float(np.linalg.eigvalsh(X.T @ X / n).max())
+w, trace = run_encoded_gd(prob, masks, step_size=1.0 / (1.3 * L + 0.05))
+
+# 4. compare against the exact ridge solution
+w_star = np.linalg.solve(X.T @ X / n + 0.05 * np.eye(p), X.T @ y / n)
+f_star = float(original_objective(prob, jnp.asarray(w_star), h="l2"))
+print(f"f(w_0)   = {trace[0]:.4f}")
+print(f"f(w_T)   = {trace[-1]:.4f}   (encoded, {m - k} stragglers/step)")
+print(f"f(w*)    = {f_star:.4f}   (exact optimum)")
+print(f"suboptimality: {trace[-1] / f_star - 1:.2%}")
+assert trace[-1] < 1.05 * f_star
+print("OK: converged within the paper's kappa-ball of the optimum")

@@ -1,0 +1,69 @@
+"""End-to-end driver: train a ~100M-param LM with CODED data parallelism
+under simulated stragglers, and compare against the uncoded baseline that
+waits for every worker.
+
+Default runs a fast CPU-sized preset; pass --preset 100m for the full-size
+run (same code path, ~100M params, a few hundred steps).
+
+  PYTHONPATH=src python examples/train_lm.py                 # ~2 min CPU
+  PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 200
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.core.straggler import bimodal_delays
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def build_cfg(preset: str):
+    base = ARCHS["deepseek-7b"]
+    if preset == "100m":
+        # ~100M params: 12L x 768, vocab 16k, tied embeddings
+        return base.with_overrides(
+            n_layers=12, d_model=768, n_heads=12, n_kv=12, d_ff=2048,
+            vocab=16384, head_dim=64, dtype="float32",
+            param_dtype="float32", attn_chunk=256)
+    return base.smoke_variant().with_overrides(vocab=1024)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="small", choices=["small", "100m"])
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--uncoded-baseline", action="store_true",
+                    help="also run the beta=1 wait-for-all baseline")
+    args = ap.parse_args()
+
+    cfg = build_cfg(args.preset)
+    tcfg = TrainerConfig(m_workers=8, beta=2, wait_k=6, rows_per_worker=1,
+                         seq_len=args.seq_len, steps=args.steps, lr=3e-3,
+                         warmup=10, log_every=10)
+    print(f"== coded DP (beta=2, wait k={tcfg.wait_k}/{tcfg.m_workers}) ==")
+    tr = Trainer(cfg, tcfg, delay_model=bimodal_delays())
+    _, _, hist = tr.run()
+    coded_loss = np.mean([h["loss"] for h in hist[-10:]])
+    coded_time = hist[-1]["sim_time_s"]
+    print(f"coded:   final loss {coded_loss:.4f}, "
+          f"simulated wall-clock {coded_time:.0f}s")
+
+    if args.uncoded_baseline:
+        print("== uncoded baseline (beta=1, wait for ALL workers) ==")
+        tcfg_u = TrainerConfig(m_workers=8, beta=1, wait_k=8,
+                               rows_per_worker=1, seq_len=args.seq_len,
+                               steps=args.steps, lr=3e-3, warmup=10,
+                               log_every=10, uncoded=True)
+        tru = Trainer(cfg, tcfg_u, delay_model=bimodal_delays())
+        _, _, hist_u = tru.run()
+        u_loss = np.mean([h["loss"] for h in hist_u[-10:]])
+        u_time = hist_u[-1]["sim_time_s"]
+        print(f"uncoded: final loss {u_loss:.4f}, "
+              f"simulated wall-clock {u_time:.0f}s")
+        print(f"speedup at equal steps: {u_time / coded_time:.2f}x "
+              f"(coded skips the stragglers every step)")
+
+
+if __name__ == "__main__":
+    main()

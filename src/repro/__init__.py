@@ -1,0 +1,6 @@
+"""repro: encoded distributed optimization (Karakus et al., 2018) as a
+production-grade JAX framework — core coded-optimization library, 10
+assigned architectures, coded data-parallel trainer, multi-pod dry-run and
+roofline tooling, Pallas TPU encode kernels."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,53 @@
+"""Minimal-dependency checkpointing: flattened pytree -> npz + json manifest.
+
+Path layout:  <dir>/step_<n>.npz  (+ .manifest.json with treedef + dtypes).
+Restore rebuilds the exact pytree (dict/tuple/NamedTuple nesting preserved
+via jax.tree flatten paths).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step"]
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(path_dir: str, step: int, tree) -> str:
+    os.makedirs(path_dir, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    path = os.path.join(path_dir, f"step_{step}.npz")
+    np.savez(path, **arrays)
+    manifest = {"step": step, "n_leaves": len(leaves),
+                "treedef": str(treedef)}
+    with open(path + ".manifest.json", "w") as f:
+        json.dump(manifest, f)
+    return path
+
+
+def restore(path_dir: str, step: int, like):
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    path = os.path.join(path_dir, f"step_{step}.npz")
+    data = np.load(path)
+    leaves, treedef = _flatten(like)
+    assert len(leaves) == len(data.files), \
+        f"checkpoint has {len(data.files)} leaves, template {len(leaves)}"
+    new_leaves = [jax.numpy.asarray(data[f"leaf_{i}"]).astype(l.dtype)
+                  for i, l in enumerate(leaves)]
+    return jax.tree.unflatten(treedef, new_leaves)
+
+
+def latest_step(path_dir: str) -> int | None:
+    if not os.path.isdir(path_dir):
+        return None
+    steps = [int(f[5:-4]) for f in os.listdir(path_dir)
+             if f.startswith("step_") and f.endswith(".npz")]
+    return max(steps) if steps else None

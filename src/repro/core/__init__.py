@@ -1,0 +1,24 @@
+"""Core library: the paper's encoded distributed optimization framework.
+
+Encoding matrices (ETF/Hadamard/Haar/Gaussian), straggler delay models,
+and the four encoded algorithms (GD, L-BFGS, proximal gradient, BCD) with
+fastest-k erasure semantics.
+"""
+from .encoding import (Encoder, make_encoder, gaussian_encoder,
+                       hadamard_encoder, haar_encoder, paley_etf_encoder,
+                       steiner_etf_encoder, replication_encoder,
+                       identity_encoder, partition_rows, pad_rows, brip_constant,
+                       subset_spectrum, hadamard_matrix)
+from .straggler import (bimodal_delays, power_law_delays, exponential_delays,
+                        multimodal_delays, constant_delays, fastest_k,
+                        active_mask, adversarial_sets, simulate_run, WallClock,
+                        adaptive_k)
+from .data_parallel import (EncodedProblem, make_encoded_problem,
+                            encoded_gradients, masked_gradient, gd_step,
+                            run_encoded_gd, prox_l1, run_encoded_proximal,
+                            original_objective)
+from .lbfgs import LBFGSState, lbfgs_direction, run_encoded_lbfgs
+from .model_parallel import (LiftedProblem, make_lifted_problem, phi_quadratic,
+                             phi_logistic, run_encoded_bcd)
+from .gradient_coding import (FRCode, make_frc, coded_weights,
+                              decode_exact_possible, assignment_matrix)

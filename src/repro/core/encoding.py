@@ -1,0 +1,265 @@
+"""Encoding matrices for encoded distributed optimization (paper §4).
+
+Convention used throughout this repo
+------------------------------------
+An encoder for data dimension ``n`` with redundancy ``beta`` is a tall matrix
+``S`` of shape ``(beta * n, n)`` normalized so that a *tight frame* satisfies
+
+    S.T @ S = beta * I_n            (exactly, for ETF / Hadamard / Haar / FRC)
+
+and a generic (e.g. Gaussian) encoder satisfies it approximately.  With this
+convention the Block-RIP condition (paper Def. 1) reads: for every worker
+subset ``A`` of fraction ``eta``,
+
+    (1 - eps) I  <=  (1 / (eta * beta)) S_A.T S_A  <=  (1 + eps) I .
+
+Row blocks are assigned to ``m`` workers contiguously (``partition_rows``).
+All constructions are host-side numpy; iteration code consumes jnp arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+__all__ = [
+    "Encoder",
+    "gaussian_encoder",
+    "hadamard_encoder",
+    "haar_encoder",
+    "paley_etf_encoder",
+    "steiner_etf_encoder",
+    "replication_encoder",
+    "identity_encoder",
+    "partition_rows",
+    "brip_constant",
+    "subset_spectrum",
+    "hadamard_matrix",
+    "make_encoder",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Encoder:
+    """A realized encoding matrix together with its metadata."""
+
+    name: str
+    S: np.ndarray  # (beta*n, n), float64
+    beta: float    # redundancy factor = rows / cols
+    tight: bool    # whether S.T S == beta I exactly
+
+    @property
+    def n(self) -> int:
+        return self.S.shape[1]
+
+    @property
+    def rows(self) -> int:
+        return self.S.shape[0]
+
+
+def hadamard_matrix(n: int) -> np.ndarray:
+    """Sylvester Hadamard matrix with +-1 entries; n must be a power of two."""
+    if n & (n - 1) or n <= 0:
+        raise ValueError(f"Hadamard order must be a power of two, got {n}")
+    H = np.array([[1.0]])
+    while H.shape[0] < n:
+        H = np.block([[H, H], [H, -H]])
+    return H
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << (int(x) - 1).bit_length()
+
+
+def gaussian_encoder(n: int, beta: float = 2.0, seed: int = 0) -> Encoder:
+    """i.i.d. Gaussian ensemble (paper §4.1 'random matrices')."""
+    rows = int(round(beta * n))
+    rng = np.random.default_rng(seed)
+    S = rng.standard_normal((rows, n)) / math.sqrt(n)
+    return Encoder("gaussian", S, rows / n, tight=False)
+
+
+def hadamard_encoder(n: int, beta: float = 2.0, seed: int = 0) -> Encoder:
+    """Column-subsampled (randomized) Hadamard ensemble (paper §4.2.2, FWHT).
+
+    S = H_N[:, cols] * D / sqrt(n), N = next_pow2(beta*n), |cols| = n, D random
+    signs.  Equivalent to inserting zero rows into the data then FWHT-ing.
+    """
+    N = _next_pow2(int(round(beta * n)))
+    rng = np.random.default_rng(seed)
+    cols = rng.choice(N, size=n, replace=False)
+    signs = rng.choice([-1.0, 1.0], size=n)
+    H = hadamard_matrix(N)
+    S = H[:, cols] * signs[None, :] / math.sqrt(n)
+    # S.T S = (N / n) I exactly -> rescale to beta = N/n convention.
+    return Encoder("hadamard", S, N / n, tight=True)
+
+
+def haar_encoder(n: int, beta: float = 2.0, seed: int = 0) -> Encoder:
+    """Column-subsampled Haar wavelet matrix (paper §4.2.1, sparse)."""
+    N = _next_pow2(int(round(beta * n)))
+    # Recursive orthonormal Haar: H_{2k} = 1/sqrt(2) [[H_k (x) [1,1]], [I_k (x) [1,-1]]]
+    H = np.array([[1.0]])
+    while H.shape[0] < N:
+        k = H.shape[0]
+        top = np.kron(H, np.array([[1.0, 1.0]]))
+        bot = np.kron(np.eye(k), np.array([[1.0, -1.0]]))
+        H = np.concatenate([top, bot], axis=0) / math.sqrt(2.0)
+    rng = np.random.default_rng(seed)
+    cols = rng.choice(N, size=n, replace=False)
+    S = H[:, cols] * math.sqrt(N / n)  # make S.T S = (N/n) I
+    return Encoder("haar", S, N / n, tight=True)
+
+
+def _jacobsthal(p: int) -> np.ndarray:
+    """Jacobsthal matrix Q_ij = chi(i - j) for prime p (quadratic character)."""
+    residues = set((x * x) % p for x in range(1, p))
+    chi = np.zeros(p)
+    for a in range(1, p):
+        chi[a] = 1.0 if a in residues else -1.0
+    idx = np.arange(p)
+    return chi[(idx[:, None] - idx[None, :]) % p]
+
+
+def is_prime(x: int) -> bool:
+    if x < 2:
+        return False
+    for d in range(2, int(math.isqrt(x)) + 1):
+        if x % d == 0:
+            return False
+    return True
+
+
+def paley_etf_encoder(n: int, seed: int = 0) -> Encoder:
+    """Real Paley ETF with redundancy beta = 2 (paper §4.1, Paley 1933).
+
+    Needs a prime p with p ≡ 1 (mod 4) and (p+1)/2 >= n; the frame lives in
+    R^{(p+1)/2} and has p+1 vectors.  We build the conference-matrix projection
+    P = (I + C / sqrt(p)) / 2 (rank (p+1)/2), take an orthonormal column basis
+    U of P ((p+1) x (p+1)/2), and subsample n columns.  Rows of sqrt(2) U form
+    a unit-norm tight frame; the column-subsampled version stays tight.
+    """
+    p = 2 * n - 1
+    while not (is_prime(p) and p % 4 == 1):
+        p += 2
+    q = _jacobsthal(p)
+    C = np.zeros((p + 1, p + 1))
+    C[0, 1:] = 1.0
+    C[1:, 0] = 1.0
+    C[1:, 1:] = q
+    # Symmetric conference matrix: C^T C = p I, diag 0.
+    P = (np.eye(p + 1) + C / math.sqrt(p)) / 2.0
+    evals, evecs = np.linalg.eigh(P)
+    U = evecs[:, evals > 0.5]  # eigenvalue-1 eigenspace, (p+1) x (p+1)/2
+    rng = np.random.default_rng(seed)
+    cols = rng.choice(U.shape[1], size=n, replace=False)
+    # Columns of U are orthonormal, so (sqrt(2) U_cols)^T (sqrt(2) U_cols) = 2I.
+    # Rescale to the repo convention S^T S = beta I with beta = rows/n.
+    beta = (p + 1) / n
+    S = math.sqrt(beta) * U[:, cols]
+    return Encoder("paley", S, beta, tight=True)
+
+
+def steiner_etf_encoder(n: int, v: int | None = None) -> Encoder:
+    """Steiner ETF from (2,2,v)-Steiner systems (paper §4.2.1, Fickus et al.).
+
+    S is v^2 x v(v-1)/2 with redundancy beta = 2v/(v-1); each 'block' (v rows
+    arising from one row of the incidence matrix V) holds v-1 distinct
+    (non-constant) columns of the order-v Hadamard matrix, scaled 1/sqrt(v-1).
+    If ``n`` is given, v is chosen so v(v-1)/2 >= n and columns subsampled.
+    """
+    if v is None:
+        v = 4
+        while v * (v - 1) // 2 < n:
+            v *= 2
+    H = hadamard_matrix(v)
+    ncols = v * (v - 1) // 2
+    pairs = [(a, b) for a in range(v) for b in range(a + 1, v)]
+    S = np.zeros((v * v, ncols))
+    # ones_in_row[r] enumerates columns whose pair contains r, in order.
+    counter = np.zeros(v, dtype=int)
+    for j, (a, b) in enumerate(pairs):
+        for r in (a, b):
+            ell = counter[r]
+            counter[r] += 1
+            S[r * v:(r + 1) * v, j] = H[:, ell + 1]  # skip all-ones column h_1
+    S /= math.sqrt(v - 1)
+    if n is not None and n < ncols:
+        cols = np.random.default_rng(0).choice(ncols, size=n, replace=False)
+        S = S[:, np.sort(cols)]
+    # Column subsampling preserves S^T S = beta I with the FRAME constant
+    # beta = 2v/(v-1) (column norm^2); storage redundancy rows/n can be larger.
+    beta = 2.0 * v / (v - 1.0)
+    return Encoder("steiner", S, beta, tight=True)
+
+
+def replication_encoder(n: int, beta: int = 2) -> Encoder:
+    """beta-fold replication: S = [I; I; ...] (baseline, paper §5)."""
+    S = np.concatenate([np.eye(n)] * int(beta), axis=0)
+    return Encoder("replication", S, float(beta), tight=True)
+
+
+def identity_encoder(n: int) -> Encoder:
+    """Uncoded baseline: S = I."""
+    return Encoder("uncoded", np.eye(n), 1.0, tight=True)
+
+
+_FACTORIES = {
+    "gaussian": gaussian_encoder,
+    "hadamard": hadamard_encoder,
+    "haar": haar_encoder,
+    "paley": lambda n, beta=2.0, seed=0: paley_etf_encoder(n, seed),
+    "steiner": lambda n, beta=2.0, seed=0: steiner_etf_encoder(n),
+    "replication": lambda n, beta=2.0, seed=0: replication_encoder(n, int(beta)),
+    "uncoded": lambda n, beta=1.0, seed=0: identity_encoder(n),
+}
+
+
+def make_encoder(name: str, n: int, beta: float = 2.0, seed: int = 0) -> Encoder:
+    if name not in _FACTORIES:
+        raise KeyError(f"unknown encoder '{name}'; have {sorted(_FACTORIES)}")
+    return _FACTORIES[name](n, beta=beta, seed=seed)
+
+
+def pad_rows(enc: Encoder, m: int) -> Encoder:
+    """Zero-pad S with extra rows so m divides the row count.
+
+    Zero rows carry no data (a worker block just has a few dead rows);
+    S^T S — and hence tightness/BRIP — is unchanged.
+    """
+    pad = (-enc.rows) % m
+    if pad == 0:
+        return enc
+    S = np.concatenate([enc.S, np.zeros((pad, enc.n))], axis=0)
+    return Encoder(enc.name, S, enc.beta, enc.tight)
+
+
+def partition_rows(enc: Encoder, m: int) -> np.ndarray:
+    """Split S row-wise into m contiguous worker blocks, shape (m, rows/m, n)."""
+    rows = enc.rows
+    if rows % m:
+        raise ValueError(f"{rows} encoded rows not divisible by m={m}")
+    return enc.S.reshape(m, rows // m, enc.n)
+
+
+def subset_spectrum(enc: Encoder, m: int, k: int, trials: int = 50,
+                    seed: int = 0) -> np.ndarray:
+    """Eigenvalues of (1/(eta*beta)) S_A^T S_A over random k-subsets (Fig 5-6)."""
+    blocks = partition_rows(enc, m)
+    eta = k / m
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(trials):
+        A = rng.choice(m, size=k, replace=False)
+        SA = blocks[A].reshape(-1, enc.n)
+        G = SA.T @ SA / (eta * enc.beta)
+        out.append(np.linalg.eigvalsh(G))
+    return np.asarray(out)
+
+
+def brip_constant(enc: Encoder, m: int, k: int, trials: int = 50,
+                  seed: int = 0) -> float:
+    """Empirical BRIP epsilon over sampled subsets: max |eig - 1|."""
+    ev = subset_spectrum(enc, m, k, trials=trials, seed=seed)
+    return float(np.max(np.abs(ev - 1.0)))

@@ -1,0 +1,99 @@
+"""Coded data parallelism for GENERAL losses (beyond-paper extension, DESIGN §4).
+
+The paper's data-parallel theory encodes (X, y) inside a quadratic loss.  For
+non-quadratic losses (e.g. LM cross-entropy) the gradient is still LINEAR in
+per-sample loss weights, so the paper's erasure-robustness transfers to the
+microbatch->worker ASSIGNMENT: worker i computes
+
+    g_i = sum_j  G[i, j] * grad l_j(w)
+
+for an assignment matrix G (m workers x b microbatch groups) and the master
+combines  g~ = sum_{i in A_t} c_i(A_t) g_i  with decode weights c.
+
+We implement the FRACTIONAL REPETITION code (FRC) — the block-structured
+special case matching the paper's Steiner layout (§4.2.1, each data block
+served by beta workers): workers are grouped into b = m / beta clusters that
+share a cluster-worth of data.  Decode: each cluster's contribution is the
+mean of its ACTIVE replicas.  Properties (property-tested):
+
+  * exact full-batch gradient whenever every cluster has >= 1 active worker
+    (i.e. tolerates any beta-1 erasures per cluster, adversarially);
+  * graceful degradation otherwise: the aggregate equals the full gradient
+    restricted to surviving clusters, rescaled — never corrupted.
+
+`coded_weights` produces per-WORKER scalar weights that multiply each worker's
+mean-loss contribution; the trainer folds them into a masked psum over the
+``data`` mesh axis (train/steps.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["FRCode", "make_frc", "coded_weights", "decode_exact_possible",
+           "assignment_matrix"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FRCode:
+    m: int        # workers (data-axis shards)
+    beta: int     # replication degree
+    clusters: np.ndarray  # (m,) cluster id of each worker
+
+    @property
+    def num_clusters(self) -> int:
+        return self.m // self.beta
+
+
+def make_frc(m: int, beta: int = 2) -> FRCode:
+    if m % beta:
+        raise ValueError(f"m={m} not divisible by beta={beta}")
+    # Interleaved assignment: replicas of a cluster are far apart in the mesh
+    # (worker i -> cluster i mod b), so correlated failures of neighbouring
+    # hosts do not take out both replicas.
+    b = m // beta
+    return FRCode(m, beta, np.arange(m) % b)
+
+
+def assignment_matrix(code: FRCode) -> np.ndarray:
+    """G (m x b): worker i computes the mean gradient of its cluster's data."""
+    G = np.zeros((code.m, code.num_clusters))
+    G[np.arange(code.m), code.clusters] = 1.0
+    return G
+
+
+def decode_exact_possible(code: FRCode, mask: np.ndarray) -> bool:
+    """True iff every cluster has at least one active replica."""
+    active_per_cluster = np.zeros(code.num_clusters)
+    np.add.at(active_per_cluster, code.clusters, np.asarray(mask, float))
+    return bool((active_per_cluster > 0).all())
+
+
+def coded_weights(code: FRCode, mask: jax.Array) -> jax.Array:
+    """Per-worker decode weights c_i(A_t), shape (m,), jit-safe.
+
+    c_i = mask_i / (#active replicas in cluster(i)); fully-erased clusters get
+    0 and the result is rescaled by  b / #surviving_clusters  so the aggregate
+    stays an unbiased mean over surviving data.
+    """
+    mask = jnp.asarray(mask, jnp.float32)
+    onehot = jnp.asarray(
+        np.eye(code.num_clusters, dtype=np.float32)[code.clusters])  # (m, b)
+    active = onehot.T @ mask                               # (b,) replicas alive
+    alive = active > 0
+    per_cluster = jnp.where(alive, 1.0 / jnp.maximum(active, 1.0), 0.0)
+    c = mask * (onehot @ per_cluster)                      # (m,)
+    surviving = jnp.maximum(jnp.sum(alive.astype(jnp.float32)), 1.0)
+    return c * (code.num_clusters / surviving)
+
+
+def coded_microbatch_index(code: FRCode) -> np.ndarray:
+    """For worker i, the cluster (data shard) index it loads: (m,).
+
+    The data pipeline uses this to hand replica workers identical microbatches
+    (data/pipeline.py); with the assigned shapes the global batch is
+    interpreted as beta x effective-batch coded slots (DESIGN §4)."""
+    return code.clusters.copy()

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+fwht: the paper's FWHT encoder (§4.2.2); coded_reduce: fused coded gradient
+combine.  ops.py holds the jit'd public wrappers; ref.py the jnp oracles.
+"""
+from .ops import fwht, hadamard_encode, coded_combine, on_tpu

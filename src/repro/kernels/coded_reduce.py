@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: fused coded gradient combine.
+
+The per-step aggregation  g~ = sum_i c_i * g_i  over the worker-stacked
+gradient block (m, P) with FRC decode weights c (m,) — the master-side
+hot path of every iteration (paper Algorithm 1 line 7).  Fusing the mask,
+scale and reduction avoids materializing the (m, P) weighted intermediate
+in HBM: the tile is weighted and reduced in VMEM in one pass.
+
+Grid over P blocks; the worker axis (m <= 32) rides along the sublane dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["coded_combine_call"]
+
+
+def _combine_body(g_ref, c_ref, o_ref):
+    g = g_ref[...].astype(jnp.float32)        # (m, BP)
+    c = c_ref[...].astype(jnp.float32)        # (m, 1)
+    o_ref[...] = jnp.sum(g * c, axis=0, keepdims=True).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def coded_combine_call(g: jax.Array, c: jax.Array, *, block: int = 2048,
+                       interpret: bool = True) -> jax.Array:
+    """g: (m, P) worker gradients; c: (m,) decode weights -> (P,)."""
+    m, P = g.shape
+    bp = min(block, P)
+    if P % bp:
+        raise ValueError(f"P={P} not divisible by block {bp}")
+    out = pl.pallas_call(
+        _combine_body,
+        grid=(P // bp,),
+        in_specs=[pl.BlockSpec((m, bp), lambda i: (0, i)),
+                  pl.BlockSpec((m, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, bp), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, P), g.dtype),
+        interpret=interpret,
+    )(g, c[:, None])
+    return out[0]

@@ -1,0 +1,61 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``on_tpu()`` flips interpret mode automatically: interpret=True on CPU
+(validation), compiled Mosaic on real TPUs.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .coded_reduce import coded_combine_call
+from .fwht import fwht_kernel_call
+
+__all__ = ["on_tpu", "fwht", "hadamard_encode", "coded_combine"]
+
+
+def on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def fwht(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Fast Walsh-Hadamard transform along ``axis`` (power-of-two length)."""
+    interpret = not on_tpu()
+    x = jnp.moveaxis(x, axis, -1)
+    lead = x.shape[:-1]
+    flat = x.reshape(-1, x.shape[-1])
+    out = fwht_kernel_call(flat, interpret=interpret)
+    return jnp.moveaxis(out.reshape(lead + (x.shape[-1],)), -1, axis)
+
+
+def hadamard_encode(X: jax.Array, cols: np.ndarray, signs: np.ndarray,
+                    N: int | None = None) -> jax.Array:
+    """Encode data X (n, p) with the randomized Hadamard ensemble:
+
+        S X = H_N[:, cols] diag(signs) X / sqrt(n)
+
+    computed as FWHT over the zero-padded, sign-flipped rows (paper §4.2.2) —
+    no S materialization.  Returns (N, p).
+    """
+    n, p = X.shape
+    N = N or 1 << (2 * n - 1).bit_length()  # default beta ~= 2 padding
+    padded = jnp.zeros((N, p), X.dtype)
+    padded = padded.at[jnp.asarray(cols)].set(
+        X * jnp.asarray(signs, X.dtype)[:, None])
+    return fwht(padded, axis=0) / math.sqrt(n)
+
+
+def coded_combine(g: jax.Array, c: jax.Array) -> jax.Array:
+    """Fused coded gradient combine: sum_i c_i g_i for (m, P) grads."""
+    interpret = not on_tpu()
+    m, P = g.shape
+    # pad P to the block multiple
+    block = 2048 if P >= 2048 else P
+    pad = (-P) % block
+    if pad:
+        g = jnp.pad(g, ((0, 0), (0, pad)))
+    out = coded_combine_call(g, c, block=block, interpret=interpret)
+    return out[:P]

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fwht_ref(x: jax.Array) -> jax.Array:
+    """Recursive FWHT along the last axis (no normalization)."""
+    n = x.shape[-1]
+    if n & (n - 1):
+        raise ValueError("power of two required")
+    x = x.astype(jnp.float32)
+    h = 1
+    while h < n:
+        y = x.reshape(x.shape[:-1] + (n // (2 * h), 2, h))
+        a, b = y[..., 0, :], y[..., 1, :]
+        x = jnp.stack([a + b, a - b], axis=-2).reshape(x.shape)
+        h *= 2
+    return x
+
+
+def fwht_matrix_ref(x: jax.Array) -> jax.Array:
+    """Dense H @ x oracle (independent of the butterfly formulation)."""
+    n = x.shape[-1]
+    H = jnp.array([[1.0]])
+    while H.shape[0] < n:
+        H = jnp.block([[H, H], [H, -H]])
+    return jnp.einsum("nm,...m->...n", H, x.astype(jnp.float32))
+
+
+def coded_combine_ref(g: jax.Array, c: jax.Array) -> jax.Array:
+    return jnp.einsum("m,mp->p", c.astype(jnp.float32),
+                      g.astype(jnp.float32)).astype(g.dtype)

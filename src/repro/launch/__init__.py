@@ -1,0 +1,6 @@
+"""Launchers: mesh construction, dry-run, CLI training driver.
+
+NOTE: do not import .dryrun from library code — it sets XLA device-count
+flags at import time and must run as its own process.
+"""
+from .mesh import make_production_mesh, make_local_mesh

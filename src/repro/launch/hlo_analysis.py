@@ -1,0 +1,312 @@
+"""Post-SPMD HLO analysis: LOOP-AWARE flops / traffic / collective accounting.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE — with
+scan-over-layers (and chunked attention / SSM scans) that undercounts by the
+trip count, and the SPMD partitioner also places FSDP all-gathers INSIDE the
+scanned body.  This module re-derives the counts from ``compiled.as_text()``:
+
+  1. parse computations + instruction symbol tables (name -> shape),
+  2. recover while trip counts from the loop-condition comparison constant,
+  3. propagate multipliers ENTRY -> fusion/call/while-body,
+  4. accumulate dot FLOPs (from contracting dims), collective output bytes
+     by kind, and an HBM-traffic estimate (dot operands+outputs, KV-cache
+     dynamic-(update-)slice, collective outputs).
+
+The traffic estimate deliberately omits fused elementwise ops (they read/
+write through the fusion's operands) — it is a documented LOWER-bound style
+estimate; §Roofline reports both this and raw cost_analysis numbers.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict
+
+__all__ = ["collective_bytes", "analyze_hlo", "roofline", "V5E"]
+
+V5E = {
+    "peak_flops": 197e12,   # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,        # bytes/s per chip
+    "link_bw": 50e9,        # bytes/s per ICI link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+"
+                  r"\[[0-9,]*\](?:\{[^}]*\})?)\s+([\w.\-]+)\((.*)$")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str):
+    m = _SHAPE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _parse_computations(text: str):
+    comps: Dict[str, list] = {}
+    entry = None
+    current = None
+    for raw in text.splitlines():
+        ls = raw.strip()
+        if current is None:
+            m = _COMP_HDR.match(ls)
+            if m:
+                current = m.group(2)
+                comps[current] = []
+                if m.group(1):
+                    entry = current
+        else:
+            if ls == "}":
+                current = None
+            else:
+                comps[current].append(ls)
+    return comps, entry
+
+
+class _CompInfo:
+    __slots__ = ("flops", "coll", "traffic", "calls", "whiles", "consts",
+                 "coll_count")
+
+    def __init__(self):
+        self.flops = 0.0
+        self.coll = {k: 0 for k in _COLLECTIVES}
+        self.coll_count = 0
+        self.traffic = 0.0
+        self.calls = []    # (comp_name, multiplier_kind) with kind 'call'
+        self.whiles = []   # (cond_name, body_name)
+        self.consts = []
+
+
+def _analyze_comp(lines) -> _CompInfo:
+    info = _CompInfo()
+    shapes: Dict[str, str] = {}
+    for ls in lines:
+        m = _DEF.match(ls)
+        if not m:
+            c = re.search(r"constant\((\d+)\)", ls)
+            if c:
+                info.consts.append(int(c.group(1)))
+            continue
+        name, shape_str, op, rest = m.groups()
+        shapes[name] = shape_str
+        c = re.search(r"constant\((\d+)\)", ls)
+        if c:
+            info.consts.append(int(c.group(1)))
+
+        if op == "dot":
+            out_elems = math.prod(_shape_dims(shape_str)) if _shape_dims(
+                shape_str) else 1
+            ops_m = re.match(r"%([\w.\-]+),\s*%([\w.\-]+)\)", rest)
+            k = 1
+            cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ls)
+            if ops_m and cdims and ops_m.group(1) in shapes:
+                lhs_dims = _shape_dims(shapes[ops_m.group(1)])
+                for ci in cdims.group(1).split(","):
+                    if ci:
+                        k *= lhs_dims[int(ci)]
+            info.flops += 2.0 * out_elems * k
+            tr = _shape_bytes(shape_str)
+            if ops_m:
+                for opn in ops_m.groups():
+                    if opn in shapes:
+                        tr += _shape_bytes(shapes[opn])
+            info.traffic += tr
+        elif op in _COLLECTIVES or any(
+                op == c + s for c in _COLLECTIVES for s in ("-start",)):
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES:
+                b = _shape_bytes(shape_str)
+                info.coll[base] += b
+                info.coll_count += 1
+                info.traffic += b
+        elif op == "dynamic-slice":
+            info.traffic += _shape_bytes(shape_str)
+        elif op == "dynamic-update-slice":
+            # Output aliases the input buffer; only the update slice
+            # (operand 1) actually moves.
+            ops_m = re.match(r"%([\w.\-]+),\s*%([\w.\-]+)", rest)
+            if ops_m and ops_m.group(2) in shapes:
+                info.traffic += _shape_bytes(shapes[ops_m.group(2)])
+        elif op == "while":
+            cond = re.search(r"condition=%([\w.\-]+)", ls)
+            body = re.search(r"body=%([\w.\-]+)", ls)
+            if cond and body:
+                info.whiles.append((cond.group(1), body.group(1)))
+        elif op == "conditional":
+            for b in re.findall(r"%([\w.\-]+)",
+                                re.search(r"branch_computations=\{([^}]*)\}",
+                                          ls).group(1)) if \
+                    "branch_computations" in ls else []:
+                info.calls.append(b)
+        if "calls=%" in ls:
+            info.calls.append(re.search(r"calls=%([\w.\-]+)", ls).group(1))
+        if "to_apply=%" in ls:
+            info.calls.append(re.search(r"to_apply=%([\w.\-]+)", ls).group(1))
+    return info
+
+
+def analyze_hlo(text: str) -> dict:
+    """Loop-aware totals over the whole module (per-device numbers)."""
+    comps, entry = _parse_computations(text)
+    infos = {name: _analyze_comp(lines) for name, lines in comps.items()}
+
+    totals = {"flops": 0.0, "traffic": 0.0, "coll_count": 0,
+              **{k: 0.0 for k in _COLLECTIVES}}
+    unknown_trips = [0]
+
+    import functools
+
+    def trip_count(cond_name: str) -> int:
+        info = infos.get(cond_name)
+        if info and info.consts:
+            return max(info.consts)
+        # condition may delegate comparison to a fused computation
+        if info:
+            for c in info.calls:
+                sub = infos.get(c)
+                if sub and sub.consts:
+                    return max(sub.consts)
+        unknown_trips[0] += 1
+        return 1
+
+    def visit(name: str, mult: float, depth: int = 0):
+        info = infos.get(name)
+        if info is None or depth > 50:
+            return
+        totals["flops"] += mult * info.flops
+        totals["traffic"] += mult * info.traffic
+        totals["coll_count"] += mult * info.coll_count
+        for k in _COLLECTIVES:
+            totals[k] += mult * info.coll[k]
+        for c in info.calls:
+            visit(c, mult, depth + 1)
+        for cond, body in info.whiles:
+            t = trip_count(cond)
+            visit(body, mult * t, depth + 1)
+            visit(cond, mult * t, depth + 1)
+
+    if entry:
+        visit(entry, 1.0)
+    totals["unknown_trip_counts"] = unknown_trips[0]
+    return totals
+
+
+def top_hotspots(text: str, n: int = 15) -> list:
+    """Per-computation breakdown (multiplier-weighted) for perf debugging.
+
+    Returns rows (comp, mult, flops, traffic, coll_bytes, hint) sorted by
+    traffic; `hint` is a jax op_name fragment from the computation metadata.
+    """
+    comps, entry = _parse_computations(text)
+    infos = {name: _analyze_comp(lines) for name, lines in comps.items()}
+    mults: Dict[str, float] = {}
+
+    def trip_count(cond_name):
+        info = infos.get(cond_name)
+        if info and info.consts:
+            return max(info.consts)
+        if info:
+            for c in info.calls:
+                sub = infos.get(c)
+                if sub and sub.consts:
+                    return max(sub.consts)
+        return 1
+
+    def visit(name, mult, depth=0):
+        info = infos.get(name)
+        if info is None or depth > 50:
+            return
+        mults[name] = mults.get(name, 0.0) + mult
+        for c in info.calls:
+            visit(c, mult, depth + 1)
+        for cond, body in info.whiles:
+            t = trip_count(cond)
+            visit(body, mult * t, depth + 1)
+
+    if entry:
+        visit(entry, 1.0)
+    rows = []
+    for name, mult in mults.items():
+        info = infos[name]
+        coll = sum(info.coll.values())
+        if info.flops == 0 and info.traffic == 0 and coll == 0:
+            continue
+        hint = ""
+        for ls in comps[name]:
+            m = re.search(r'op_name="([^"]{0,90})', ls)
+            if m and ("dot" in m.group(1) or "while" in m.group(1)):
+                hint = m.group(1)
+                break
+            if m and not hint:
+                hint = m.group(1)
+        rows.append((name, mult, mult * info.flops, mult * info.traffic,
+                     mult * coll, hint))
+    by_traffic = sorted(rows, key=lambda r: -(r[3] + r[4]))[:n]
+    by_flops = sorted(rows, key=lambda r: -r[2])[:n // 2]
+    seen = {r[0] for r in by_traffic}
+    return by_traffic + [r for r in by_flops if r[0] not in seen]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Loop-aware per-kind collective output bytes (per device)."""
+    t = analyze_hlo(hlo_text)
+    out = {k: t[k] for k in _COLLECTIVES}
+    out["count"] = t["coll_count"]
+    return out
+
+
+def roofline(cost: dict, hlo_totals: dict, n_chips: int,
+             model_flops: float | None = None) -> dict:
+    """Three roofline terms (seconds) + bottleneck.
+
+    Uses loop-aware HLO totals for compute/collective; the memory term takes
+    max(cost_analysis bytes, loop-aware dot/cache traffic estimate).
+    """
+    flops = float(hlo_totals.get("flops", 0.0))
+    bytes_cost = float(cost.get("bytes accessed", 0.0))
+    bytes_est = float(hlo_totals.get("traffic", 0.0))
+    bytes_acc = max(bytes_cost, bytes_est)
+    cbytes = float(sum(hlo_totals.get(k, 0.0) for k in _COLLECTIVES))
+    terms = {
+        "compute_s": flops / V5E["peak_flops"],
+        "memory_s": bytes_acc / V5E["hbm_bw"],
+        "collective_s": cbytes / V5E["link_bw"],
+    }
+    bottleneck = max(terms, key=terms.get)
+    out = {**terms, "bottleneck": bottleneck.replace("_s", ""),
+           "hlo_flops_per_device": flops,
+           "hlo_bytes_per_device": bytes_acc,
+           "hlo_bytes_cost_analysis": bytes_cost,
+           "hlo_bytes_traffic_est": bytes_est,
+           "collective_bytes_per_device": cbytes,
+           "collective_count": hlo_totals.get("coll_count", 0),
+           "unknown_trip_counts": hlo_totals.get("unknown_trip_counts", 0),
+           "n_chips": n_chips}
+    if model_flops is not None:
+        total_hlo = flops * n_chips
+        out["model_flops"] = model_flops
+        out["useful_ratio"] = model_flops / total_hlo if total_hlo else 0.0
+    return out

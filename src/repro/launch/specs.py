@@ -1,0 +1,158 @@
+"""ShapeDtypeStruct input stands-ins + their shardings for the dry-run.
+
+``input_specs(cfg, shape_name)`` returns (inputs, make_shardings(mesh)) for
+each execution kind:
+
+  train   -> {tokens, labels, weights, <modality extras>}
+  prefill -> {tokens, <modality extras>}
+  decode  -> (token, caches, index)  — ONE new token + KV cache of seq_len
+
+Shardings: batch over ("pod","data") when divisible; for long_500k (batch 1)
+the KV-cache SEQUENCE dim is sharded over the data axes instead (context
+parallelism for decode, DESIGN §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, windowed_variant, needs_window_for_long
+from ..configs.base import ArchConfig
+from ..models import transformer as T
+from ..models.common import Dtype
+from ..sharding import batch_axes
+
+__all__ = ["shape_config", "input_specs", "input_shardings", "cache_struct"]
+
+
+def shape_config(cfg: ArchConfig, shape_name: str) -> ArchConfig:
+    """Arch variant actually lowered for this input shape (DESIGN §4)."""
+    shp = SHAPES[shape_name]
+    if shape_name == "long_500k" and needs_window_for_long(cfg):
+        cfg = windowed_variant(cfg)
+    if shp["kind"] == "train":
+        # Bigger scan chunks for training lower memory-proportionate HLO.
+        return cfg
+    return cfg
+
+
+def _extras_struct(cfg: ArchConfig, B: int, S: int):
+    dt = Dtype.of(cfg.dtype)
+    out = {}
+    if cfg.n_patches:
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_vision), dt)
+        out["mrope_positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+    if cfg.n_enc_layers:
+        out["enc_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_enc_frames, cfg.d_model), dt)
+    return out
+
+
+def cache_struct(cfg: ArchConfig, B: int, cache_len: int):
+    """ShapeDtypeStructs of the decode caches (no allocation)."""
+    return jax.eval_shape(lambda: T.init_caches(cfg, B, cache_len))
+
+
+def input_specs(cfg: ArchConfig, shape_name: str):
+    """Returns (kind, inputs) with ShapeDtypeStruct leaves."""
+    shp = SHAPES[shape_name]
+    B, S, kind = shp["global_batch"], shp["seq_len"], shp["kind"]
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if kind == "train":
+        inputs = {"tokens": tok, "labels": tok,
+                  "weights": jax.ShapeDtypeStruct((B,), jnp.float32)}
+        inputs.update(_extras_struct(cfg, B, S))
+        return kind, inputs
+    if kind == "prefill":
+        inputs = {"tokens": tok}
+        inputs.update(_extras_struct(cfg, B, S))
+        return kind, inputs
+    # decode: one token, cache of length S (position S-1 being generated)
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    caches = cache_struct(cfg, B, S)
+    index = jax.ShapeDtypeStruct((), jnp.int32)
+    return kind, (token, caches, index)
+
+
+# ------------------------------------------------------------- shardings ---
+
+def _batch_spec(mesh: Mesh, B: int, rest_ndim: int):
+    ba = batch_axes(mesh)
+    import math
+    size = math.prod(mesh.shape[a] for a in ba)
+    first = ba if B % size == 0 and B >= size else None
+    return P(*((first,) + (None,) * rest_ndim))
+
+
+def _cache_specs(cfg: ArchConfig, B: int, cache_len: int, mesh: Mesh):
+    """PartitionSpec tree mirroring init_caches' structure."""
+    import math
+    ba = batch_axes(mesh)
+    bsz = math.prod(mesh.shape[a] for a in ba)
+    msz = mesh.shape["model"]
+    bspec = ba if (B % bsz == 0 and B >= bsz) else None
+    shard_seq = bspec is None  # context-parallel decode for batch-1
+
+    def attn_spec(C):
+        seq = ba if (shard_seq and C % bsz == 0) else None
+        kv = "model" if cfg.n_kv % msz == 0 else None
+        s = P(None, bspec, seq, kv, None)
+        return T.attn.AttnCache(s, s)
+
+    di = cfg.mamba_expand * cfg.d_model
+    dp = int(cfg.xlstm_proj_factor * cfg.d_model)
+    specs = []
+    for spec in cfg.period:
+        if spec.kind == "attn":
+            C = min(cache_len, spec.window) if spec.window else cache_len
+            s = attn_spec(C)
+            if spec.cross_attn:
+                s = (s, attn_spec(max(cfg.n_enc_frames, 1)))
+        elif spec.kind == "mamba":
+            dim = "model" if di % msz == 0 else None
+            s = T.mb.MambaCache(P(None, bspec, None, dim),
+                                P(None, bspec, dim, None))
+        elif spec.kind == "mlstm":
+            hdim = "model" if cfg.n_heads % msz == 0 else None
+            s = T.xl.MLSTMCache(P(None, bspec, hdim, None, None),
+                                P(None, bspec, hdim, None),
+                                P(None, bspec, hdim))
+        elif spec.kind == "slstm":
+            hdim = "model" if cfg.n_heads % msz == 0 else None
+            sp = P(None, bspec, hdim, None)
+            s = T.xl.SLSTMCache(sp, sp, sp, sp)
+        specs.append(s)
+    return tuple(specs)
+
+
+def input_shardings(cfg: ArchConfig, shape_name: str, mesh: Mesh):
+    """NamedSharding tree matching input_specs' structure."""
+    shp = SHAPES[shape_name]
+    B, S, kind = shp["global_batch"], shp["seq_len"], shp["kind"]
+    ns = lambda spec: NamedSharding(mesh, spec)
+
+    def extras(specs):
+        out = {}
+        if cfg.n_patches:
+            out["patch_embeds"] = ns(_batch_spec(mesh, B, 2))
+            out["mrope_positions"] = ns(P(None, *_batch_spec(mesh, B, 1)))
+        if cfg.n_enc_layers:
+            out["enc_embeds"] = ns(_batch_spec(mesh, B, 2))
+        return out
+
+    tok = ns(_batch_spec(mesh, B, 1))
+    if kind == "train":
+        sh = {"tokens": tok, "labels": tok,
+              "weights": ns(_batch_spec(mesh, B, 0))}
+        sh.update(extras(None))
+        return sh
+    if kind == "prefill":
+        sh = {"tokens": tok}
+        sh.update(extras(None))
+        return sh
+    caches = jax.tree.map(
+        lambda s: ns(s), _cache_specs(cfg, B, S, mesh),
+        is_leaf=lambda x: isinstance(x, P))
+    return (tok, caches, ns(P()))

@@ -1,0 +1,4 @@
+"""Model zoo: one functional implementation per architecture family."""
+from .transformer import (Model, init_params, param_axes, param_defs, forward,
+                          prefill, decode_step, init_caches, lm_loss)
+from .common import pdef, tree_init, tree_axes

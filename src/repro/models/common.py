@@ -1,0 +1,146 @@
+"""Shared model utilities: parameter-definition trees, norms, activations.
+
+Parameters are declared once as ``pdef(shape, axes)`` descriptor trees; the
+same tree yields (a) initialized jnp arrays and (b) logical-axis trees that
+``repro.sharding`` maps to mesh ``PartitionSpec``s.  Logical axis vocabulary:
+
+    vocab, embed, heads, kv, head_dim, ff, expert, d_inner, d_state, dt_rank,
+    conv, stack (the scanned period-repeat axis), None (replicated)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pdef", "tree_init", "tree_axes", "stack_defs", "rmsnorm",
+           "layernorm", "act_fn", "softcap", "Dtype", "cast"]
+
+_PARAM = "__pdef__"
+
+
+def pdef(shape, axes, init: str = "normal", scale: float | None = None,
+         fan_in: int | None = None):
+    """Declare a parameter: shape, logical axes (len == ndim), init kind.
+
+    ``fan_in`` overrides the default (= prod(shape[:-1])) used for the
+    1/sqrt(fan_in) normal init — needed for layouts like (embed, heads, hd)
+    where the contraction dim is only ``embed``.
+    """
+    assert len(shape) == len(axes), (shape, axes)
+    return {_PARAM: True, "shape": tuple(int(s) for s in shape),
+            "axes": tuple(axes), "init": init, "scale": scale,
+            "fan_in": fan_in}
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, dict) and x.get(_PARAM) is True
+
+
+def _materialize(d, key, dtype):
+    shape, init, scale = d["shape"], d["init"], d["scale"]
+    if init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if init == "ones":
+        return jnp.ones(shape, dtype)
+    if init == "normal":
+        fan = d["fan_in"] or int(math.prod(shape[:-1])) or 1
+        s = scale if scale is not None else 1.0 / math.sqrt(max(fan, 1))
+        return (s * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+    if init == "mamba_dt_bias":
+        # softplus^-1 of dt in [1e-3, 0.1], standard mamba init
+        u = jax.random.uniform(key, shape, jnp.float32,
+                               math.log(1e-3), math.log(1e-1))
+        dt = jnp.exp(u)
+        return (dt + jnp.log1p(-jnp.exp(-dt))).astype(dtype)
+    if init == "mamba_A_log":
+        # A = -(1..d_state) broadcast: log of it
+        n = shape[-1]
+        a = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), shape)
+        return jnp.log(a).astype(dtype)
+    raise ValueError(f"unknown init {init}")
+
+
+def tree_init(defs: Any, key: jax.Array, dtype=jnp.float32):
+    """Materialize a descriptor tree into a parameter pytree."""
+    leaves = []
+
+    def walk(d, path):
+        if _is_def(d):
+            leaves.append((path, d))
+        elif isinstance(d, dict):
+            for k in sorted(d):
+                if k == _PARAM:
+                    continue
+                walk(d[k], path + (k,))
+        else:
+            raise TypeError(f"bad def node at {path}: {type(d)}")
+
+    walk(defs, ())
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out: dict = {}
+    for (path, d), k in zip(leaves, keys):
+        node = out
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = _materialize(d, k, dtype)
+    return out
+
+
+def tree_axes(defs: Any):
+    """Extract the logical-axes tree (same structure, tuples at leaves)."""
+    if _is_def(defs):
+        return defs["axes"]
+    return {k: tree_axes(v) for k, v in defs.items() if k != _PARAM}
+
+
+def stack_defs(defs: Any, n: int):
+    """Prepend a scanned 'stack' axis of size n to every param in the tree."""
+    if _is_def(defs):
+        return pdef((n,) + defs["shape"], ("stack",) + defs["axes"],
+                    init=defs["init"], scale=defs["scale"],
+                    fan_in=defs["fan_in"])
+    return {k: stack_defs(v, n) for k, v in defs.items() if k != _PARAM}
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))
+            + bias.astype(jnp.float32)).astype(dt)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    """Gemma2-style logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+class Dtype:
+    @staticmethod
+    def of(name: str):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+                "float16": jnp.float16}[name]
+
+
+def cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(
+        x.dtype, jnp.floating) else x, tree)

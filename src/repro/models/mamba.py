@@ -1,0 +1,145 @@
+"""Mamba-1 selective SSM block (Jamba's recurrent layer), TPU-adapted.
+
+The CUDA reference is a fused recurrent kernel holding state in SRAM.  The
+TPU-native adaptation (DESIGN §3) is a CHUNKED PARALLEL SCAN: the sequence is
+split into chunks of ``cfg.mamba_chunk``; a `lax.scan` carries the (B, d_inner,
+d_state) state across chunks while `lax.associative_scan` parallelizes within
+a chunk (materializing only (B, Q, d_inner, d_state) per chunk, which is
+sharded over `model` via the d_inner dim).  The recurrence
+
+    h_t = a_t * h_{t-1} + b_t,   a_t = exp(dt_t A),  b_t = dt_t B_t x_t
+
+composes associatively as (a2*a1, a2*b1 + b2).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import pdef
+
+__all__ = ["mamba_defs", "mamba_apply", "mamba_decode", "MambaCache",
+           "init_mamba_cache"]
+
+
+def _dims(cfg):
+    di = cfg.mamba_expand * cfg.d_model
+    dtr = cfg.mamba_dt_rank or max(cfg.d_model // 16, 1)
+    return di, cfg.mamba_d_state, dtr, cfg.mamba_conv
+
+
+def mamba_defs(cfg):
+    d = cfg.d_model
+    di, ds, dtr, k = _dims(cfg)
+    return {
+        "in_proj": pdef((d, 2 * di), ("embed", "d_inner")),
+        "conv_w": pdef((k, di), (None, "d_inner"), scale=1.0 / math.sqrt(k)),
+        "conv_b": pdef((di,), ("d_inner",), init="zeros"),
+        "x_proj": pdef((di, dtr + 2 * ds), ("d_inner", None)),
+        "dt_w": pdef((dtr, di), (None, "d_inner")),
+        "dt_b": pdef((di,), ("d_inner",), init="mamba_dt_bias"),
+        "A_log": pdef((di, ds), ("d_inner", "d_state"), init="mamba_A_log"),
+        "D": pdef((di,), ("d_inner",), init="ones"),
+        "out_proj": pdef((di, d), ("d_inner", "embed")),
+    }
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array  # (B, k-1, d_inner) last inputs for the causal conv
+    ssm: jax.Array   # (B, d_inner, d_state) recurrent state
+
+
+def init_mamba_cache(cfg, B: int, dtype) -> MambaCache:
+    di, ds, _, k = _dims(cfg)
+    return MambaCache(jnp.zeros((B, k - 1, di), dtype),
+                      jnp.zeros((B, di, ds), jnp.float32))
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, S, di); w: (k, di) -> (B, S, di)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, j:j + x.shape[1], :] * w[j] for j in range(k))
+    return out + b
+
+
+def _ssm_inputs(p, x_conv):
+    """Common selective-SSM input computation. x_conv: (..., di)."""
+    di, ds = p["A_log"].shape
+    dtr = p["dt_w"].shape[0]
+    xdb = jnp.einsum("...d,dk->...k", x_conv, p["x_proj"])
+    dt_raw, Bm, Cm = jnp.split(xdb, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("...r,rd->...d", dt_raw, p["dt_w"]).astype(jnp.float32)
+        + p["dt_b"].astype(jnp.float32))                # (..., di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))        # (di, ds)
+    a = jnp.exp(dt[..., None] * A)                      # (..., di, ds)
+    b = (dt[..., None] * Bm.astype(jnp.float32)[..., None, :]
+         * x_conv.astype(jnp.float32)[..., None])       # (..., di, ds)
+    return a, b, Cm.astype(jnp.float32)
+
+
+def _scan_combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a2 * a1, a2 * b1 + b2
+
+
+def mamba_apply(p, x, cfg, return_cache: bool = False):
+    """Full-sequence forward. x: (B, S, d) -> (B, S, d) [, MambaCache]."""
+    B, S, d = x.shape
+    di, ds, _, k = _dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_conv = jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"]))
+
+    Q = min(cfg.mamba_chunk, S)
+    Sp = ((S + Q - 1) // Q) * Q          # pad tail (causal: outputs unaffected)
+    if Sp != S:
+        # Padded steps would decay the carried state (dt(0) != 0), so the
+        # final state is only returned for divisible lengths.
+        assert not return_cache, "prefill length must be divisible by chunk"
+        x_conv = jnp.pad(x_conv, ((0, 0), (0, Sp - S), (0, 0)))
+    nc = Sp // Q
+    xc = x_conv.reshape(B, nc, Q, di).transpose(1, 0, 2, 3)  # (nc,B,Q,di)
+
+    def chunk_body(h, xq):
+        a, b, Cm = _ssm_inputs(p, xq)                   # (B,Q,di,ds)
+        Ac, Bc = jax.lax.associative_scan(_scan_combine, (a, b), axis=1)
+        hs = Ac * h[:, None] + Bc                       # (B,Q,di,ds)
+        y = jnp.einsum("bqds,bqs->bqd", hs, Cm)         # (B,Q,di)
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    h_last, yc = jax.lax.scan(chunk_body, h0, xc)       # yc: (nc,B,Q,di)
+    y = yc.transpose(1, 0, 2, 3).reshape(B, Sp, di)[:, :S]
+    x_conv = x_conv[:, :S]
+    y = y + p["D"].astype(jnp.float32) * x_conv.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"])
+    if return_cache:
+        conv_state = x_in[:, S - (k - 1):, :] if S >= k - 1 else jnp.pad(
+            x_in, ((0, 0), (k - 1 - S, 0), (0, 0)))
+        return out, MambaCache(conv_state, h_last)
+    return out
+
+
+def mamba_decode(p, x, cache: MambaCache, cfg):
+    """Single-token step. x: (B, 1, d) -> ((B, 1, d), new cache)."""
+    B = x.shape[0]
+    di, ds, _, k = _dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)                 # (B,1,di)
+    window = jnp.concatenate([cache.conv, x_in], axis=1)  # (B,k,di)
+    x_conv = jax.nn.silu(
+        jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"])[:, None]
+    a, b, Cm = _ssm_inputs(p, x_conv[:, 0])             # (B,di,ds)
+    h = a * cache.ssm + b
+    y = jnp.einsum("bds,bs->bd", h, Cm)[:, None]        # (B,1,di)
+    y = y + p["D"].astype(jnp.float32) * x_conv.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"])
+    return out, MambaCache(window[:, 1:], h)

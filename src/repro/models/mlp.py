@@ -1,0 +1,24 @@
+"""Gated MLP (SwiGLU/GeGLU-style) used by all dense blocks."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .common import pdef, act_fn
+
+__all__ = ["mlp_defs", "mlp_apply"]
+
+
+def mlp_defs(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "ffn_wi": pdef((d, f), ("embed", "ff")),
+        "ffn_wg": pdef((d, f), ("embed", "ff")),
+        "ffn_wo": pdef((f, d), ("ff", "embed")),
+    }
+
+
+def mlp_apply(p, x, cfg):
+    act = act_fn(cfg.act)
+    h = act(jnp.einsum("bsd,df->bsf", x, p["ffn_wg"])) * jnp.einsum(
+        "bsd,df->bsf", x, p["ffn_wi"])
+    return jnp.einsum("bsf,fd->bsd", h, p["ffn_wo"])

@@ -1,0 +1,107 @@
+"""Mixture-of-Experts layer: top-k token-choice routing with sort-based
+capacity dispatch (no one-hot dispatch matmuls — gather/scatter only, so
+compiled FLOPs track ACTIVE parameters, which matters for the §Roofline
+'useful compute' ratio).
+
+Dispatch is vmapped over the batch dim: each batch row sorts its own S*k
+assignments, so under data-parallel sharding the sort stays device-local and
+the only cross-device traffic is the (B, E, C, d) expert all-to-all that XLA
+inserts when experts are sharded over the ``model`` axis (DESIGN §5).
+
+Aux losses: Switch-style load-balance + router z-loss, returned for logging
+and added to the training objective with cfg.router_aux_weight.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import pdef, act_fn
+
+__all__ = ["moe_defs", "moe_apply"]
+
+
+def moe_defs(cfg):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": pdef((d, E), ("embed", None), scale=0.02),
+        "moe_wi": pdef((E, d, f), ("expert", "embed", "ff"), fan_in=d),
+        "moe_wg": pdef((E, d, f), ("expert", "embed", "ff"), fan_in=d),
+        "moe_wo": pdef((E, f, d), ("expert", "ff", "embed"), fan_in=f),
+    }
+
+
+def _dispatch_one(x, expert_ids, weights, E: int, C: int):
+    """Per-batch-row dispatch. x: (S, d); expert_ids/weights: (S, k).
+
+    Returns (buffer (E, C, d), combine metadata) using argsort grouping.
+    """
+    S, k = expert_ids.shape
+    flat_e = expert_ids.reshape(-1)                     # (S*k,)
+    flat_w = weights.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(S), k)             # token index per slot
+
+    order = jnp.argsort(flat_e)                         # group by expert
+    e_sorted = flat_e[order]
+    t_sorted = flat_tok[order]
+    w_sorted = flat_w[order]
+
+    # Rank of each assignment within its expert group.
+    counts = jnp.bincount(flat_e, length=E)             # (E,)
+    offsets = jnp.cumsum(counts) - counts               # exclusive prefix
+    rank = jnp.arange(S * k) - offsets[e_sorted]
+    keep = rank < C                                     # capacity drop
+    rank_c = jnp.where(keep, rank, 0)
+
+    buf = jnp.zeros((E, C, x.shape[-1]), x.dtype)
+    buf = buf.at[e_sorted, rank_c].add(
+        jnp.where(keep[:, None], x[t_sorted], 0.0))
+    return buf, (e_sorted, rank_c, t_sorted, w_sorted, keep)
+
+
+def _combine_one(y, meta, S: int):
+    """y: (E, C, d) expert outputs -> (S, d) weighted combine."""
+    e_sorted, rank_c, t_sorted, w_sorted, keep = meta
+    gathered = y[e_sorted, rank_c]                      # (S*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0.0) * w_sorted[:, None]
+    out = jnp.zeros((S, y.shape[-1]), y.dtype)
+    return out.at[t_sorted].add(gathered)
+
+
+def moe_apply(p, x, cfg):
+    """x: (B, S, d) -> (out (B, S, d), aux_losses dict)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(int(cfg.capacity_factor * S * k / E), 1)
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)              # (B, S, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # Aux losses (Switch): load balance over expert fractions x router probs.
+    me = jnp.mean(probs, axis=(0, 1))                   # (E,)
+    ce = jnp.mean(
+        (jax.nn.one_hot(top_e[..., 0], E)), axis=(0, 1))
+    aux_lb = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    buf, meta = jax.vmap(
+        lambda xb, eb, wb: _dispatch_one(xb, eb, wb, E, C))(
+            x, top_e, top_w.astype(x.dtype))            # buf: (B, E, C, d)
+
+    if getattr(cfg, "moe_local_dispatch", False):
+        # §Perf B5: keep the data-dependent gather/scatter local to the
+        # batch shard; only the expert einsum below moves data (one clean
+        # all-to-all) instead of SPMD permute-chains through the scatter.
+        from jax.sharding import PartitionSpec as P
+        buf = jax.lax.with_sharding_constraint(
+            buf, P(("data",), None, None, None))
+
+    act = act_fn(cfg.act)
+    h = act(jnp.einsum("becd,edf->becf", buf, p["moe_wg"])) * jnp.einsum(
+        "becd,edf->becf", buf, p["moe_wi"])
+    y = jnp.einsum("becf,efd->becd", h, p["moe_wo"])        # (B, E, C, d)
+
+    out = jax.vmap(lambda yb, mb: _combine_one(yb, mb, S))(y, meta)
+    return out, {"load_balance": aux_lb, "router_z": z_loss}

@@ -1,0 +1,292 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable) and
+sLSTM (scalar memory with recurrent gate connections, inherently sequential).
+
+mLSTM uses the stabilized CHUNKWISE form (the TPU-native adaptation of the
+fused CUDA kernel): a lax.scan carries the per-head matrix state
+(C: dk x dv, n: dk, log-scale m) across chunks; within a chunk the output is
+computed in quadratic attention form with exponential-gating decay weights —
+all matmuls, MXU-friendly.  sLSTM has genuine recurrent weights R h_{t-1} in
+every gate, so it runs as a sequential lax.scan over time (the paper itself
+notes sLSTM is not parallelizable).
+
+Stabilization follows the xLSTM appendix: every exponential is taken relative
+to a running max m; the hidden read is h = num / max(|den|, exp(-m*)).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import pdef, rmsnorm
+
+__all__ = ["mlstm_defs", "mlstm_apply", "mlstm_decode", "MLSTMCache",
+           "init_mlstm_cache", "slstm_defs", "slstm_apply", "slstm_decode",
+           "SLSTMCache", "init_slstm_cache"]
+
+
+# ---------------------------------------------------------------- mLSTM ----
+
+def _mdims(cfg):
+    dp = int(cfg.xlstm_proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    dk = dp // H
+    return dp, H, dk
+
+
+def mlstm_defs(cfg):
+    d = cfg.d_model
+    dp, H, dk = _mdims(cfg)
+    return {
+        "up": pdef((d, 2 * dp), ("embed", "d_inner")),
+        "wq": pdef((dp, H, dk), ("d_inner", "heads", "head_dim"), fan_in=dp),
+        "wk": pdef((dp, H, dk), ("d_inner", "heads", "head_dim"), fan_in=dp),
+        "wv": pdef((dp, H, dk), ("d_inner", "heads", "head_dim"), fan_in=dp),
+        "wi": pdef((dp, H), ("d_inner", None), scale=0.02),
+        "wf": pdef((dp, H), ("d_inner", None), scale=0.02),
+        "bi": pdef((H,), (None,), init="zeros"),
+        "bf": pdef((H,), (None,), init="ones"),  # bias toward remembering
+        "gn": pdef((dp,), ("d_inner",), init="zeros"),
+        "down": pdef((dp, d), ("d_inner", "embed")),
+    }
+
+
+class MLSTMCache(NamedTuple):
+    C: jax.Array  # (B, H, dk, dk) matrix memory (dv == dk here)
+    n: jax.Array  # (B, H, dk) normalizer state
+    m: jax.Array  # (B, H) running log-scale
+
+
+def init_mlstm_cache(cfg, B: int, dtype) -> MLSTMCache:
+    _, H, dk = _mdims(cfg)
+    return MLSTMCache(jnp.zeros((B, H, dk, dk), jnp.float32),
+                      jnp.zeros((B, H, dk), jnp.float32),
+                      jnp.full((B, H), -1e30, jnp.float32))
+
+
+def _mlstm_qkvg(p, x):
+    """x: (B, S, d) -> q,k,v (B,S,H,dk) f32, li/lf (B,S,H) f32, z (B,S,dp)."""
+    xz = jnp.einsum("bsd,de->bse", x, p["up"])
+    xm, z = jnp.split(xz, 2, axis=-1)
+    q = jnp.einsum("bse,ehk->bshk", xm, p["wq"]).astype(jnp.float32)
+    k = jnp.einsum("bse,ehk->bshk", xm, p["wk"]).astype(jnp.float32)
+    k = k / math.sqrt(k.shape[-1])
+    v = jnp.einsum("bse,ehk->bshk", xm, p["wv"]).astype(jnp.float32)
+    li = (jnp.einsum("bse,eh->bsh", xm, p["wi"])
+          + p["bi"]).astype(jnp.float32)                       # log input gate
+    lf = jax.nn.log_sigmoid(
+        (jnp.einsum("bse,eh->bsh", xm, p["wf"]) + p["bf"]).astype(jnp.float32))
+    return q, k, v, li, lf, z, xm
+
+
+def mlstm_apply(p, x, cfg, return_cache: bool = False):
+    """Full-sequence chunkwise mLSTM. x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    dp, H, dk = _mdims(cfg)
+    q, k, v, li, lf, z, _ = _mlstm_qkvg(p, x)
+
+    Q = min(cfg.mamba_chunk, S)
+    Sp = ((S + Q - 1) // Q) * Q          # pad tail (causal: outputs unaffected)
+    if Sp != S:
+        assert not return_cache, "prefill length must be divisible by chunk"
+        pad = Sp - S
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for t in (q, k, v))
+        li, lf = (jnp.pad(t, ((0, 0), (0, pad), (0, 0))) for t in (li, lf))
+        z = jnp.pad(z, ((0, 0), (0, pad), (0, 0)))
+    nc = Sp // Q
+
+    def cs(t):  # (B,S,...) -> (nc, B, Q, ...)
+        return t.reshape((B, nc, Q) + t.shape[2:]).swapaxes(0, 1)
+
+    def body(carry, xs):
+        C, n, m = carry                                  # (B,H,dk,dk) etc.
+        qc, kc, vc, lic, lfc = xs                        # (B,Q,H,*)
+        F = jnp.cumsum(lfc, axis=1)                      # (B,Q,H) log decay
+        # intra-chunk log weights: w[t,s] = F_t - F_s + li_s  (s <= t)
+        wl = (F[:, :, None] - F[:, None, :]
+              + lic[:, None, :, :])                      # (B,Qt,Qs,H)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        wl = jnp.where(tri[None, :, :, None], wl, -jnp.inf)
+        # inter: log weight of carried state at t: F_t + m
+        inter_l = F + m[:, None]                         # (B,Q,H)
+        mstar = jnp.maximum(wl.max(axis=2), inter_l)     # (B,Q,H)
+        wts = jnp.exp(wl - mstar[:, :, None])            # (B,Qt,Qs,H)
+        scores = jnp.einsum("bthk,bshk->btsh", qc, kc) * wts
+        num = jnp.einsum("btsh,bshv->bthv", scores, vc)
+        den = scores.sum(axis=2)          # q.n intra part: sum_s w_ts (q.k_s)
+        w_int = jnp.exp(inter_l - mstar)                 # (B,Q,H)
+        num = num + w_int[..., None] * jnp.einsum("bthk,bhkv->bthv", qc, C)
+        den = den + w_int * jnp.einsum("bthk,bhk->bth", qc, n)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-mstar))[..., None]
+        # state update to end of chunk
+        total = F[:, -1]                                 # (B,H)
+        upd_l = total[:, None] - F + lic                 # (B,Q,H) weight of s
+        m_new = jnp.maximum(total + m, upd_l.max(axis=1))
+        wu = jnp.exp(upd_l - m_new[:, None])             # (B,Q,H)
+        carryw = jnp.exp(total + m - m_new)              # (B,H)
+        C_new = carryw[..., None, None] * C + jnp.einsum(
+            "bshk,bsh,bshv->bhkv", kc, wu, vc)
+        n_new = carryw[..., None] * n + jnp.einsum("bshk,bsh->bhk", kc, wu)
+        return (C_new, n_new, m_new), h
+
+    cache0 = init_mlstm_cache(cfg, B, x.dtype)
+    xs = (cs(q), cs(k), cs(v), cs(li), cs(lf))
+    carry0 = (cache0.C, cache0.n, cache0.m)
+    if getattr(cfg, "slstm_shard_batch", False):
+        # §Perf O6 (same fix as the sLSTM scan): keep chunked inputs and the
+        # matrix-memory carry batch-sharded across chunk iterations.
+        from jax.sharding import PartitionSpec as P
+        con = lambda t: jax.lax.with_sharding_constraint(
+            t, P(*((None, ("data",)) + (None,) * (t.ndim - 2))))
+        xs = tuple(con(t) for t in xs)
+        carry0 = tuple(jax.lax.with_sharding_constraint(
+            t, P(*((("data",),) + (None,) * (t.ndim - 1)))) for t in carry0)
+    (C, n, m), hc = jax.lax.scan(body, carry0, xs)
+    h = hc.swapaxes(0, 1).reshape(B, Sp, dp)[:, :S]      # (B,S,dp)
+    h = rmsnorm(h, p["gn"])                              # per-channel norm
+    h = h * jax.nn.silu(z[:, :S])
+    out = jnp.einsum("bse,ed->bsd", h.astype(x.dtype), p["down"])
+    if return_cache:
+        return out, MLSTMCache(C, n, m)
+    return out
+
+
+def mlstm_decode(p, x, cache: MLSTMCache, cfg):
+    """Single-step mLSTM. x: (B, 1, d)."""
+    B = x.shape[0]
+    dp, H, dk = _mdims(cfg)
+    q, k, v, li, lf, z, _ = _mlstm_qkvg(p, x)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                  # (B,H,dk)
+    li, lf = li[:, 0], lf[:, 0]                          # (B,H)
+    m_new = jnp.maximum(lf + cache.m, li)
+    fw = jnp.exp(lf + cache.m - m_new)
+    iw = jnp.exp(li - m_new)
+    C = fw[..., None, None] * cache.C + iw[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = fw[..., None] * cache.n + iw[..., None] * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, C)
+    den = jnp.einsum("bhk,bhk->bh", q, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    h = h.reshape(B, 1, dp)
+    h = rmsnorm(h, p["gn"]) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", h.astype(x.dtype), p["down"])
+    return out, MLSTMCache(C, n, m_new)
+
+
+# ---------------------------------------------------------------- sLSTM ----
+
+def _sdims(cfg):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    fs = ((4 * cfg.d_model // 3 + 63) // 64) * 64  # post-up-projection 4/3
+    return H, dh, fs
+
+
+def slstm_defs(cfg):
+    d = cfg.d_model
+    H, dh, fs = _sdims(cfg)
+    gates = {}
+    for g in "zifo":
+        gates[f"w{g}"] = pdef((d, H, dh), ("embed", "heads", "head_dim"),
+                              fan_in=d)
+        gates[f"r{g}"] = pdef((H, dh, dh), ("heads", "head_dim", None),
+                              fan_in=dh, scale=0.5 / math.sqrt(dh))
+        gates[f"b{g}"] = pdef((H, dh), ("heads", "head_dim"),
+                              init="ones" if g == "f" else "zeros")
+    return {
+        **gates,
+        "gn": pdef((d,), ("embed",), init="zeros"),
+        "up": pdef((d, fs), ("embed", "ff")),
+        "gate": pdef((d, fs), ("embed", "ff")),
+        "down": pdef((fs, d), ("ff", "embed")),
+    }
+
+
+class SLSTMCache(NamedTuple):
+    c: jax.Array  # (B, H, dh)
+    n: jax.Array  # (B, H, dh)
+    m: jax.Array  # (B, H, dh) stabilizer
+    h: jax.Array  # (B, H, dh) previous hidden (for recurrent gates)
+
+
+def init_slstm_cache(cfg, B: int, dtype) -> SLSTMCache:
+    H, dh, _ = _sdims(cfg)
+    zero = jnp.zeros((B, H, dh), jnp.float32)
+    return SLSTMCache(zero, zero, jnp.full((B, H, dh), -1e30, jnp.float32),
+                      zero)
+
+
+def _slstm_cell(p, xz, xi, xf, xo, state: SLSTMCache) -> SLSTMCache:
+    """One recurrence step; x*: (B, H, dh) precomputed input projections."""
+    h = state.h
+    rec = lambda g: jnp.einsum("bhd,hde->bhe", h, p[f"r{g}"])
+    z = jnp.tanh(xz + rec("z") + p["bz"])
+    li = xi + rec("i") + p["bi"]
+    lf = jax.nn.log_sigmoid(xf + rec("f") + p["bf"])
+    o = jax.nn.sigmoid(xo + rec("o") + p["bo"])
+    m_new = jnp.maximum(lf + state.m, li)
+    fw = jnp.exp(lf + state.m - m_new)
+    iw = jnp.exp(li - m_new)
+    c = fw * state.c + iw * z
+    n = jnp.maximum(fw * state.n + iw, jnp.exp(-m_new))
+    h_new = o * c / n
+    return SLSTMCache(c, n, m_new, h_new)
+
+
+def _slstm_inputs(p, x):
+    """x: (B, S, d) -> per-gate projections, each (B, S, H, dh) f32."""
+    proj = lambda g: jnp.einsum(
+        "bsd,dhe->bshe", x, p[f"w{g}"]).astype(jnp.float32)
+    return proj("z"), proj("i"), proj("f"), proj("o")
+
+
+def _slstm_post(p, h, x, cfg):
+    """GroupNorm + gated post-up-projection; h: (B, S, d)-shaped hidden."""
+    h = rmsnorm(h.astype(jnp.float32), p["gn"]).astype(x.dtype)
+    u = jax.nn.silu(jnp.einsum("bsd,df->bsf", h, p["gate"])) * jnp.einsum(
+        "bsd,df->bsf", h, p["up"])
+    return jnp.einsum("bsf,fd->bsd", u, p["down"])
+
+
+def slstm_apply(p, x, cfg, return_cache: bool = False):
+    """Full-sequence sLSTM via sequential scan. x: (B, S, d)."""
+    B, S, d = x.shape
+    H, dh, _ = _sdims(cfg)
+    xz, xi, xf, xo = _slstm_inputs(p, x)
+    if getattr(cfg, "slstm_shard_batch", False):
+        # §Perf O6: pin the scanned gate projections (and the carry, via
+        # state0) to pure batch sharding so the per-timestep dynamic-slice
+        # does not reshard on every step.
+        from jax.sharding import PartitionSpec as P
+        con = lambda t: jax.lax.with_sharding_constraint(
+            t, P(("data",), None, None, None))
+        xz, xi, xf, xo = con(xz), con(xi), con(xf), con(xo)
+
+    def body(state, xs):
+        state = _slstm_cell(p, *xs, state)
+        return state, state.h
+
+    state0 = init_slstm_cache(cfg, B, x.dtype)
+    if getattr(cfg, "slstm_shard_batch", False):
+        from jax.sharding import PartitionSpec as P
+        state0 = SLSTMCache(*(jax.lax.with_sharding_constraint(
+            t, P(("data",), None, None)) for t in state0))
+    state, hs = jax.lax.scan(
+        body, state0, (xz.swapaxes(0, 1), xi.swapaxes(0, 1),
+                       xf.swapaxes(0, 1), xo.swapaxes(0, 1)))
+    h = hs.swapaxes(0, 1).reshape(B, S, d)
+    out = _slstm_post(p, h, x, cfg)
+    if return_cache:
+        return out, state
+    return out
+
+
+def slstm_decode(p, x, cache: SLSTMCache, cfg):
+    B = x.shape[0]
+    xz, xi, xf, xo = _slstm_inputs(p, x)
+    state = _slstm_cell(p, xz[:, 0], xi[:, 0], xf[:, 0], xo[:, 0], cache)
+    h = state.h.reshape(B, 1, -1)
+    return _slstm_post(p, h, x, cfg), state

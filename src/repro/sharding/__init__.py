@@ -1,0 +1,2 @@
+from .rules import (logical_rules, make_specs, make_shardings, batch_axes,
+                    spec_for_shape)

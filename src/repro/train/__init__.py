@@ -1,0 +1,2 @@
+from .steps import build_train_step, build_prefill_step, build_decode_step
+from .trainer import Trainer, TrainerConfig

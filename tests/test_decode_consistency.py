@@ -1,0 +1,43 @@
+"""prefill + decode must reproduce the full forward pass (all 10 archs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import Model
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_prefill_decode_matches_forward(arch):
+    # high capacity factor: MoE capacity-dropping is the one legitimate
+    # divergence between batched and incremental execution
+    cfg = ARCHS[arch].smoke_variant().with_overrides(capacity_factor=4.0)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    B, S = 2, 64
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S + 1)), jnp.int32)
+    kw = {}
+    if cfg.n_patches:
+        kw["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_patches, cfg.d_vision)) * 0.02,
+            jnp.float32)
+        kw["mrope_positions"] = jnp.broadcast_to(
+            jnp.arange(S + 1)[None, None], (3, B, S + 1)).astype(jnp.int32)
+    if cfg.n_enc_layers:
+        kw["enc_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_enc_frames, cfg.d_model)) * 0.02,
+            jnp.float32)
+
+    full, _ = model(params, toks, **kw)
+    kwp = dict(kw)
+    if cfg.n_patches:
+        kwp["mrope_positions"] = kw["mrope_positions"][:, :, :S]
+    lg_pref, caches = model.prefill(params, toks[:, :S], cache_len=S + 8,
+                                    **kwp)
+    lg_dec, new_caches = model.decode(params, toks[:, S:S + 1], caches,
+                                      jnp.int32(S))
+    scale = float(jnp.abs(full).max())
+    assert float(jnp.abs(lg_pref[:, 0] - full[:, S - 1]).max()) < 1e-3 * scale
+    assert float(jnp.abs(lg_dec[:, 0] - full[:, S]).max()) < 1e-3 * scale

@@ -1,0 +1,79 @@
+"""Encoding-matrix properties (paper §4): tightness, Welch bound, BRIP."""
+import numpy as np
+import pytest
+
+from repro.core import (make_encoder, brip_constant, subset_spectrum,
+                        hadamard_matrix, paley_etf_encoder,
+                        steiner_etf_encoder, partition_rows)
+
+TIGHT = ["hadamard", "haar", "steiner", "paley", "replication", "uncoded"]
+
+
+@pytest.mark.parametrize("name", TIGHT)
+def test_tight_frame(name):
+    enc = make_encoder(name, 64, beta=2.0)
+    G = enc.S.T @ enc.S
+    assert np.abs(G - enc.beta * np.eye(enc.n)).max() < 1e-8
+
+
+def test_hadamard_matrix_orthogonal():
+    H = hadamard_matrix(64)
+    assert np.abs(H @ H.T - 64 * np.eye(64)).max() == 0
+
+
+def test_steiner_block_structure():
+    enc = steiner_etf_encoder(None, v=8)
+    # v^2 x v(v-1)/2, column norm^2 = 2v/(v-1)
+    assert enc.S.shape == (64, 28)
+    norms = (enc.S ** 2).sum(0)
+    assert np.allclose(norms, 2 * 8 / 7)
+    # block sparsity: each column has exactly 2v nonzeros
+    assert ((enc.S != 0).sum(0) == 16).all()
+
+
+def test_paley_welch_bound():
+    """ETFs meet the Welch bound with equality (Prop 7)."""
+    enc = paley_etf_encoder(32)
+    # rows of S (frame vectors); normalize to unit norm
+    F = enc.S / np.linalg.norm(enc.S, axis=1, keepdims=True)
+    G = np.abs(F @ F.T - np.eye(F.shape[0]))
+    n_vec, dim = F.shape[0], 32
+    welch = np.sqrt((n_vec - dim) / (dim * (n_vec - 1)))
+    # For the column-subsampled Paley ETF the max coherence should be close
+    # to (and never substantially below) the Welch bound.
+    assert G.max() <= 3.0 * welch
+    assert G.max() >= 0.9 * welch
+
+
+def test_brip_gaussian_matches_theory():
+    """Gaussian subset eigenvalues concentrate within the Marchenko-Pastur
+    style edges of eq. (8)-(9)."""
+    enc = make_encoder("gaussian", 128, beta=2.0, seed=3)
+    ev = subset_spectrum(enc, 16, 12, trials=20, seed=1)
+    edge_hi = (1 + np.sqrt(1 / (2 * 0.75))) ** 2
+    edge_lo = (1 - np.sqrt(1 / (2 * 0.75))) ** 2
+    assert ev.max() < 1.4 * edge_hi
+    assert ev.min() > 0.25 * edge_lo
+
+
+def test_etf_spectrum_flatter_than_gaussian():
+    """Fig 5-6: ETF subset spectra concentrate around 1 more tightly."""
+    had = subset_spectrum(make_encoder("hadamard", 128, 2.0), 16, 12, 20)
+    gau = subset_spectrum(make_encoder("gaussian", 128, 2.0), 16, 12, 20)
+    iqr = lambda e: np.quantile(e, 0.9) - np.quantile(e, 0.1)
+    assert iqr(had) < iqr(gau)
+
+
+def test_brip_constant_replication_degenerate():
+    """Dropping both replicas of a block makes replication singular —
+    the paper's argument for coding over replication."""
+    eps = brip_constant(make_encoder("replication", 64, 2.0), 16, 8,
+                        trials=200, seed=0)
+    assert eps >= 1.0  # some subset is rank-deficient
+
+
+def test_partition_rows_shape():
+    enc = make_encoder("hadamard", 64, 2.0)
+    blocks = partition_rows(enc, 8)
+    assert blocks.shape == (8, 16, 64)
+    assert np.allclose(blocks.reshape(-1, 64), enc.S)

@@ -1,0 +1,185 @@
+"""Unit tests for model building blocks: rope, attention (vs naive ref),
+mamba/xlstm sequential equivalence, softcap."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models.attention import attention, ring_slot_positions
+from repro.models.common import softcap, rmsnorm, tree_init
+from repro.models.rope import rope_angles, mrope_angles, apply_rope
+import repro.models.mamba as MB
+import repro.models.xlstm as XL
+
+
+def _naive_attention(q, k, v, causal, window, cap):
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    kk = jnp.repeat(k, G, axis=2)
+    vv = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / np.sqrt(hd)
+    s = softcap(s, cap)
+    qpos = np.arange(Sq)[:, None]
+    kpos = np.arange(Sq)[None, :]
+    mask = np.ones((Sq, Sq), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(jnp.asarray(mask)[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+
+
+@pytest.mark.parametrize("causal,window,cap", [
+    (True, None, None), (True, 16, None), (True, None, 50.0),
+    (False, None, None), (True, 8, 30.0),
+])
+def test_attention_vs_naive(causal, window, cap):
+    B, S, H, K, hd = 2, 64, 4, 2, 16
+    q = jax.random.normal(jax.random.key(0), (B, S, H, hd))
+    k = jax.random.normal(jax.random.key(1), (B, S, K, hd))
+    v = jax.random.normal(jax.random.key(2), (B, S, K, hd))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    out = attention(q, k, v, causal=causal, window=window, cap=cap,
+                    qpos=pos, kpos=pos, kvalid=jnp.ones((S,), bool),
+                    chunk=16)   # forces the online-softmax path
+    ref = _naive_attention(q, k, v, causal, window, cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_attention_chunked_equals_direct():
+    B, S, H, hd = 1, 128, 2, 8
+    q = jax.random.normal(jax.random.key(3), (B, S, H, hd))
+    k = jax.random.normal(jax.random.key(4), (B, S, H, hd))
+    v = jax.random.normal(jax.random.key(5), (B, S, H, hd))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    kw = dict(causal=True, window=None, cap=None, qpos=pos, kpos=pos,
+              kvalid=jnp.ones((S,), bool))
+    direct = attention(q, k, v, chunk=S, **kw)
+    chunked = attention(q, k, v, chunk=32, **kw)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(direct),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_banded_attention_matches_naive():
+    """O1 banded path (skip out-of-window KV blocks) must be exact."""
+    B, S, H, K, hd, W, chunk = 1, 256, 4, 2, 16, 32, 16
+    q = jax.random.normal(jax.random.key(10), (B, S, H, hd))
+    k = jax.random.normal(jax.random.key(11), (B, S, K, hd))
+    v = jax.random.normal(jax.random.key(12), (B, S, K, hd))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    out = attention(q, k, v, causal=True, window=W, cap=None, qpos=pos,
+                    kpos=pos, kvalid=jnp.ones((S,), bool), chunk=chunk,
+                    banded=True)
+    ref = _naive_attention(q, k, v, True, W, None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_banded_attention_with_softcap():
+    B, S, H, hd, W, chunk = 2, 128, 2, 8, 16, 8
+    q = jax.random.normal(jax.random.key(13), (B, S, H, hd))
+    k = jax.random.normal(jax.random.key(14), (B, S, H, hd))
+    v = jax.random.normal(jax.random.key(15), (B, S, H, hd))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    out = attention(q, k, v, causal=True, window=W, cap=30.0, qpos=pos,
+                    kpos=pos, kvalid=jnp.ones((S,), bool), chunk=chunk,
+                    banded=True)
+    ref = _naive_attention(q, k, v, True, W, 30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ring_slot_positions():
+    # cache of 4 slots, 6 tokens written: slots hold positions 4,5,2,3
+    pos, valid = ring_slot_positions(4, 6)
+    np.testing.assert_array_equal(np.asarray(pos), [4, 5, 2, 3])
+    assert np.asarray(valid).all()
+    pos, valid = ring_slot_positions(4, 2)   # only 2 written
+    np.testing.assert_array_equal(np.asarray(pos), [0, 1, -2, -1])
+    np.testing.assert_array_equal(np.asarray(valid), [True, True, False,
+                                                      False])
+
+
+def test_rope_preserves_norm_and_relative_shift():
+    cos, sin = rope_angles(jnp.arange(8), 16)
+    x = jax.random.normal(jax.random.key(0), (1, 8, 2, 16))
+    rx = apply_rope(x, cos[None], sin[None])
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(rx, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+    # relative property: <R(p)q, R(p+d)k> depends only on d
+    q = jax.random.normal(jax.random.key(1), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.key(2), (1, 1, 1, 16))
+    def dot_at(p, d):
+        cq, sq = rope_angles(jnp.array([p]), 16)
+        ck, sk = rope_angles(jnp.array([p + d]), 16)
+        return float(jnp.vdot(apply_rope(q, cq[None], sq[None]),
+                              apply_rope(k, ck[None], sk[None])))
+    assert abs(dot_at(0, 3) - dot_at(5, 3)) < 1e-4
+
+
+def test_mrope_reduces_to_rope_for_text():
+    """Identical (t,h,w) positions == standard 1-D RoPE."""
+    S, hd = 8, 32
+    pos3 = jnp.broadcast_to(jnp.arange(S)[None, None], (3, 1, S))
+    cos_m, sin_m = mrope_angles(pos3, hd, (4, 6, 6))
+    cos_r, sin_r = rope_angles(jnp.arange(S), hd)
+    # mrope concatenates per-section frequencies in order -> same table
+    np.testing.assert_allclose(np.asarray(cos_m[0]), np.asarray(cos_r),
+                               rtol=1e-6)
+
+
+def test_mamba_seq_equals_decode():
+    cfg = ARCHS["jamba-1.5-large-398b"].smoke_variant()
+    p = tree_init(MB.mamba_defs(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 32, cfg.d_model)) * 0.5
+    yfull, cache_end = MB.mamba_apply(p, x, cfg, return_cache=True)
+    cache = MB.init_mamba_cache(cfg, 2, x.dtype)
+    ys = []
+    for t in range(32):
+        y1, cache = MB.mamba_decode(p, x[:, t:t + 1], cache, cfg)
+        ys.append(y1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(yfull), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cache.ssm),
+                               np.asarray(cache_end.ssm), rtol=1e-3,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["mlstm", "slstm"])
+def test_xlstm_seq_equals_decode(kind):
+    cfg = ARCHS["xlstm-350m"].smoke_variant()
+    defs = XL.mlstm_defs(cfg) if kind == "mlstm" else XL.slstm_defs(cfg)
+    apply_fn = XL.mlstm_apply if kind == "mlstm" else XL.slstm_apply
+    decode_fn = XL.mlstm_decode if kind == "mlstm" else XL.slstm_decode
+    init_fn = (XL.init_mlstm_cache if kind == "mlstm"
+               else XL.init_slstm_cache)
+    p = tree_init(defs, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 32, cfg.d_model)) * 0.5
+    yfull = apply_fn(p, x, cfg)
+    cache = init_fn(cfg, 2, x.dtype)
+    ys = []
+    for t in range(32):
+        y1, cache = decode_fn(p, x[:, t:t + 1], cache, cfg)
+        ys.append(y1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(yfull), rtol=1e-3, atol=1e-4)
+
+
+def test_softcap_bounds():
+    x = jnp.linspace(-1000, 1000, 101)
+    y = softcap(x, 50.0)
+    assert float(jnp.abs(y).max()) <= 50.0
+    np.testing.assert_allclose(np.asarray(softcap(x, None)), np.asarray(x))
+
+
+def test_rmsnorm_scale():
+    x = jax.random.normal(jax.random.key(0), (4, 32)) * 10
+    y = rmsnorm(x, jnp.zeros(32))
+    rms = np.sqrt(np.mean(np.asarray(y) ** 2, -1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-2)

@@ -1,0 +1,118 @@
+"""Trainer integration + data pipeline + checkpoint roundtrip + straggler
+models."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import (make_frc, bimodal_delays, power_law_delays,
+                        exponential_delays, multimodal_delays, fastest_k,
+                        adversarial_sets, simulate_run)
+from repro.data import TokenStream, CodedBatcher
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def test_coded_batcher_replica_consistency():
+    code = make_frc(8, 2)
+    stream = TokenStream(128, seed=0)
+    b = CodedBatcher(stream, code, rows_per_worker=2, seq_len=16)
+    mask = np.ones(8)
+    toks, labels, w = b.next_batch(mask)
+    assert toks.shape == (16, 16) and labels.shape == (16, 16)
+    np.testing.assert_array_equal(labels[:, :-1], toks[:, 1:])
+    # replicas (workers i and i+4 share cluster i%4) carry identical rows
+    t = toks.reshape(8, 2, 16)
+    for i in range(4):
+        np.testing.assert_array_equal(t[i], t[i + 4])
+    # full mask -> every sample weight contributes 1/beta * rescale == 0.5*1
+    np.testing.assert_allclose(w, 0.5)
+
+
+def test_coded_batcher_masked_weights():
+    code = make_frc(8, 2)
+    b = CodedBatcher(TokenStream(128), code, 1, 8)
+    mask = np.ones(8)
+    mask[0] = 0.0   # cluster 0 survives via worker 4
+    _, _, w = b.next_batch(mask)
+    assert w[0] == 0.0
+    assert w[4] == pytest.approx(1.0)   # lone replica carries full weight
+
+
+def test_trainer_loss_decreases():
+    cfg = ARCHS["deepseek-7b"].smoke_variant().with_overrides(
+        n_layers=2, vocab=256)
+    tcfg = TrainerConfig(m_workers=4, beta=2, wait_k=3, rows_per_worker=2,
+                         seq_len=32, steps=25, lr=3e-3, warmup=5,
+                         log_every=0)
+    tr = Trainer(cfg, tcfg, delay_model=bimodal_delays())
+    params, opt, hist = tr.run()
+    losses = [h["loss"] for h in hist]
+    assert all(np.isfinite(losses))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+    assert hist[-1]["sim_time_s"] > 0
+
+
+def test_trainer_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import save, restore, latest_step
+    cfg = ARCHS["deepseek-7b"].smoke_variant().with_overrides(
+        n_layers=2, vocab=128)
+    tcfg = TrainerConfig(m_workers=2, beta=2, wait_k=1, seq_len=16, steps=3,
+                         log_every=0)
+    tr = Trainer(cfg, tcfg)
+    params, opt, _ = tr.run()
+    save(str(tmp_path), 3, (params, opt))
+    assert latest_step(str(tmp_path)) == 3
+    params2, opt2 = restore(str(tmp_path), 3, (params, opt))
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("model", [bimodal_delays(), power_law_delays(),
+                                   exponential_delays(), multimodal_delays()])
+def test_delay_models_nonnegative(model):
+    rng = np.random.default_rng(0)
+    d = model(rng, 1000)
+    assert d.shape == (1000,)
+    assert (d >= 0).all()
+
+
+def test_bimodal_has_heavy_mode():
+    rng = np.random.default_rng(1)
+    d = bimodal_delays()(rng, 4000)
+    assert (d > 10).mean() == pytest.approx(0.5, abs=0.05)
+
+
+def test_fastest_k_and_adversarial_coverage():
+    rng = np.random.default_rng(2)
+    d = rng.random(16)
+    A = fastest_k(d, 4)
+    assert len(A) == 4
+    assert d[A].max() <= np.delete(d, A).min()
+    # adversarial rotation erases every worker eventually
+    erased = set()
+    for keep in adversarial_sets(16, 12, 10):
+        erased |= set(range(16)) - set(keep.tolist())
+    assert erased == set(range(16))
+
+
+def test_adaptive_k_overlap_guarantee():
+    """Paper §3.3: adaptive k always yields |A_t ∩ A_{t-1}| > m/beta."""
+    from repro.core import adaptive_k
+    rng = np.random.default_rng(3)
+    m, beta = 16, 2.0
+    prev = None
+    for _ in range(50):
+        d = bimodal_delays()(rng, m)
+        A = adaptive_k(d, prev, beta, k_min=8)
+        assert len(A) >= 8
+        if prev is not None:
+            assert len(set(A) & set(prev)) > m / beta
+        prev = A
+
+
+def test_simulate_run_clock_monotone():
+    times = [t for _, _, t in simulate_run(bimodal_delays(), 8, 6, 20)]
+    assert all(b > a for a, b in zip(times, times[1:]))
