@@ -6,18 +6,24 @@ import time
 import numpy as np
 
 
-def time_us(fn, *args, iters: int = 5, warmup: int = 1, **kw) -> float:
-    for _ in range(warmup):
-        fn(*args, **kw)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args, **kw)
-    # block on jax outputs if present
+def _block(out):
+    """block_until_ready on jax outputs; no-op for host values."""
     try:
         import jax
-        jax.block_until_ready(out)
+        return jax.block_until_ready(out)
     except Exception:
-        pass
+        return out
+
+
+def time_us(fn, *args, iters: int = 5, warmup: int = 1, **kw) -> float:
+    """Mean microseconds per call; blocks on device outputs INSIDE the timed
+    loop (blocking only after the final call lets earlier dispatches overlap
+    and under-reports per-iteration time)."""
+    for _ in range(warmup):
+        _block(fn(*args, **kw))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        _block(fn(*args, **kw))
     return (time.perf_counter() - t0) / iters * 1e6
 
 
@@ -26,9 +32,10 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 
 
 def masks_from_delays(model, m, k, steps, seed=0):
-    from repro.core import simulate_run, active_mask
-    masks, times = [], []
-    for _, A, t in simulate_run(model, m, k, steps, seed=seed):
-        masks.append(active_mask(m, A))
-        times.append(t)
-    return np.stack(masks), np.asarray(times)
+    """Realize a fastest-k schedule via the cluster runtime; returns
+    (masks (T, m), commit times (T,)) — same accounting as
+    ``core.straggler.WallClock`` (k-th order statistic per barrier)."""
+    from repro.runtime import ClusterEngine, FastestK
+    sched = ClusterEngine(model, m, seed=seed).sample_schedule(
+        steps, FastestK(k))
+    return sched.masks, sched.times

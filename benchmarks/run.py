@@ -12,7 +12,8 @@ import time
 
 def main() -> None:
     from . import (bench_spectrum, bench_ridge, bench_lasso, bench_logistic,
-                   bench_matrix_factorization, bench_kernels, bench_coded_lm)
+                   bench_matrix_factorization, bench_kernels, bench_coded_lm,
+                   bench_runtime)
     print("name,us_per_call,derived")
     suites = [
         ("spectrum (paper Figs 5-6)", bench_spectrum.run),
@@ -23,6 +24,7 @@ def main() -> None:
          bench_matrix_factorization.run),
         ("coded-DP LM trainer (beyond-paper, DESIGN §4)", bench_coded_lm.run),
         ("kernels", bench_kernels.run),
+        ("runtime scan-fused vs legacy loops", bench_runtime.run),
     ]
     t_all = time.time()
     for title, fn in suites:

@@ -111,12 +111,17 @@ def gd_step(prob: EncodedProblem, w: jax.Array, mask: jax.Array,
 
 def run_encoded_gd(prob: EncodedProblem, masks: np.ndarray, step_size: float,
                    w0: jax.Array | None = None, h: str = "l2"):
-    """Run GD over a precomputed (T, m) mask schedule; returns (w_T, f-trace)."""
+    """Run GD over a precomputed (T, m) mask schedule; returns (w_T, f-trace).
+
+    Thin wrapper over the scan-fused runner (runtime/runners.py): the whole
+    schedule and objective trace stay on device — one compiled program
+    instead of one dispatch + host sync per step.  Same math and op order as
+    the historical per-step ``gd_step`` loop.
+    """
+    from repro.runtime.runners import scan_gd
     w = jnp.zeros(prob.SX.shape[-1]) if w0 is None else w0
-    trace = []
-    for t in range(masks.shape[0]):
-        w = gd_step(prob, w, jnp.asarray(masks[t]), step_size, h=h)
-        trace.append(float(original_objective(prob, w, h=h)))
+    w, trace = scan_gd(prob, jnp.asarray(masks, jnp.float32), step_size, w,
+                       h=h)
     return w, np.asarray(trace)
 
 
@@ -135,10 +140,10 @@ def prox_step(prob: EncodedProblem, w: jax.Array, mask: jax.Array,
 
 def run_encoded_proximal(prob: EncodedProblem, masks: np.ndarray,
                          step_size: float, w0: jax.Array | None = None):
-    """Encoded ISTA over a mask schedule; returns (w_T, f-trace with h=l1)."""
+    """Encoded ISTA over a mask schedule; returns (w_T, f-trace with h=l1).
+
+    Thin wrapper over the scan-fused runner (runtime/runners.py)."""
+    from repro.runtime.runners import scan_prox
     w = jnp.zeros(prob.SX.shape[-1]) if w0 is None else w0
-    trace = []
-    for t in range(masks.shape[0]):
-        w = prox_step(prob, w, jnp.asarray(masks[t]), step_size)
-        trace.append(float(original_objective(prob, w, h="l1")))
+    w, trace = scan_prox(prob, jnp.asarray(masks, jnp.float32), step_size, w)
     return w, np.asarray(trace)

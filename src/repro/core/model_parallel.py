@@ -82,25 +82,13 @@ def run_encoded_bcd(prob: LiftedProblem, masks: np.ndarray, step_size: float,
     the CURRENT global activations, but only workers in A_t commit it.
 
     Returns (v_T, w_T = S^T v_T implicit activations, objective trace).
+
+    Thin wrapper over the scan-fused runner (runtime/runners.py): the per
+    iteration update d_i = -alpha (X S_i^T)^T grad phi(z) with erased workers
+    masked to a no-op, the whole schedule scanned in one compiled program.
     """
+    from repro.runtime.runners import scan_bcd
     m, n, pb = prob.XS.shape
     v = jnp.zeros((m, pb)) if v0 is None else v0
-
-    @jax.jit
-    def step(v, mask):
-        u = jnp.einsum("mnb,mb->mn", prob.XS, v)       # per-worker activations
-        z = u.sum(axis=0)                              # full activations
-        gphi = prob.phi_grad(z)                        # (n,)
-        # d_i = -alpha * (X S_i^T)^T grad phi(z)  == -alpha * nabla_i g~(v)
-        d = -step_size * jnp.einsum("mnb,n->mb", prob.XS, gphi)
-        v_new = v + mask[:, None] * d                  # erased workers: no-op
-        return v_new, prob.phi_val(z)
-
-    trace = []
-    for t in range(masks.shape[0]):
-        v, fval = step(v, jnp.asarray(masks[t]))
-        trace.append(float(fval))
-    # Final objective value
-    z = jnp.einsum("mnb,mb->n", prob.XS, v)
-    trace.append(float(prob.phi_val(z)))
+    v, trace = scan_bcd(prob, jnp.asarray(masks, jnp.float32), step_size, v)
     return v, np.asarray(trace)

@@ -119,20 +119,26 @@ def _analyze_comp(lines) -> _CompInfo:
         if op == "dot":
             out_elems = math.prod(_shape_dims(shape_str)) if _shape_dims(
                 shape_str) else 1
-            ops_m = re.match(r"%([\w.\-]+),\s*%([\w.\-]+)\)", rest)
+            # Operand list up to the closing paren; some XLA versions print
+            # operand shapes inline ("dot(f32[...] %a, f32[...] %b)"), so
+            # match %names anywhere rather than anchoring at the start.
+            opnames = re.findall(r"%([\w.\-]+)", rest.split(")")[0])[:2]
             k = 1
             cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ls)
-            if ops_m and cdims and ops_m.group(1) in shapes:
-                lhs_dims = _shape_dims(shapes[ops_m.group(1)])
+            lhs_dims = None
+            if opnames and opnames[0] in shapes:
+                lhs_dims = _shape_dims(shapes[opnames[0]])
+            elif "[" in rest:  # inline operand shape, first bracket is lhs
+                lhs_dims = _shape_dims(rest)
+            if cdims and lhs_dims:
                 for ci in cdims.group(1).split(","):
                     if ci:
                         k *= lhs_dims[int(ci)]
             info.flops += 2.0 * out_elems * k
             tr = _shape_bytes(shape_str)
-            if ops_m:
-                for opn in ops_m.groups():
-                    if opn in shapes:
-                        tr += _shape_bytes(shapes[opn])
+            for opn in opnames:
+                if opn in shapes:
+                    tr += _shape_bytes(shapes[opn])
             info.traffic += tr
         elif op in _COLLECTIVES or any(
                 op == c + s for c in _COLLECTIVES for s in ("-start",)):
@@ -147,9 +153,9 @@ def _analyze_comp(lines) -> _CompInfo:
         elif op == "dynamic-update-slice":
             # Output aliases the input buffer; only the update slice
             # (operand 1) actually moves.
-            ops_m = re.match(r"%([\w.\-]+),\s*%([\w.\-]+)", rest)
-            if ops_m and ops_m.group(2) in shapes:
-                info.traffic += _shape_bytes(shapes[ops_m.group(2)])
+            opnames = re.findall(r"%([\w.\-]+)", rest.split(")")[0])
+            if len(opnames) >= 2 and opnames[1] in shapes:
+                info.traffic += _shape_bytes(shapes[opnames[1]])
         elif op == "while":
             cond = re.search(r"condition=%([\w.\-]+)", ls)
             body = re.search(r"body=%([\w.\-]+)", ls)

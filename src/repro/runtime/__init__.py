@@ -1,0 +1,38 @@
+"""repro.runtime — event-driven straggler cluster runtime (DESIGN.md §5).
+
+Four parts:
+  * ``engine``     — discrete-event cluster simulator: delay sampling,
+                     pluggable active-set policies, barrier vs per-arrival
+                     wall-clock accounting;
+  * ``strategies`` — one ``Strategy`` interface + registry over every scheme
+                     the paper compares (encoded GD/prox/L-BFGS/BCD, uncoded,
+                     replication, async stale-gradient SGD);
+  * ``runners``    — ``lax.scan``-fused device-resident iteration loops;
+  * ``compare``    — strategy x delay-model CLI harness emitting
+                     wall-clock-vs-objective traces (JSON/CSV).
+"""
+from .engine import (DELAY_MODELS, POLICIES, ActiveSetPolicy, AdaptiveK,
+                     AdversarialRotation, AsyncTrace, ClusterEngine, Deadline,
+                     FastestK, IterationEvent, Schedule, make_delay_model,
+                     make_policy)
+from .runners import scan_async, scan_bcd, scan_gd, scan_prox
+from .strategies import (ProblemSpec, RunResult, Strategy,
+                         available_strategies, get_strategy,
+                         register_strategy)
+__all__ = [
+    "DELAY_MODELS", "POLICIES", "ActiveSetPolicy", "AdaptiveK",
+    "AdversarialRotation", "AsyncTrace", "ClusterEngine", "Deadline",
+    "FastestK", "IterationEvent", "Schedule", "make_delay_model",
+    "make_policy", "scan_async", "scan_bcd", "scan_gd", "scan_prox",
+    "ProblemSpec", "RunResult", "Strategy", "available_strategies",
+    "get_strategy", "register_strategy", "run_matrix",
+]
+
+
+def __getattr__(name):
+    # Lazy: importing .compare eagerly would shadow `python -m
+    # repro.runtime.compare` (runpy warns about double import).
+    if name == "run_matrix":
+        from .compare import run_matrix
+        return run_matrix
+    raise AttributeError(name)

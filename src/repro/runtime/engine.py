@@ -1,0 +1,280 @@
+"""Discrete-event cluster simulator for straggler experiments (DESIGN.md §5-6).
+
+The engine owns everything about *time*: it samples per-worker delays from a
+``core.straggler`` delay model, decides which workers the master waits for
+(pluggable active-set policies), and charges wall-clock correctly for both
+execution modes the paper compares (§5):
+
+  * **bulk-synchronous** strategies pay a *barrier* per iteration — the master
+    commits when the slowest worker in the active set arrives
+    (``sample_schedule``; for fastest-k this is the k-th order statistic, the
+    same accounting as ``core.straggler.WallClock``);
+  * **asynchronous** strategies pay *per arrival* — every worker gradient is
+    applied the moment it lands on the master, so a single straggler delays
+    only its own (stale) update (``sample_async``).
+
+Everything here is host-side numpy; the resulting mask / event arrays are fed
+into the device-resident ``lax.scan`` runners (``runtime.runners``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.straggler import (DelayModel, adaptive_k, bimodal_delays,
+                                  constant_delays, exponential_delays,
+                                  fastest_k, multimodal_delays,
+                                  power_law_delays)
+
+__all__ = [
+    "DELAY_MODELS", "make_delay_model", "ActiveSetPolicy", "FastestK",
+    "AdaptiveK", "Deadline", "AdversarialRotation", "POLICIES", "make_policy",
+    "IterationEvent", "Schedule", "AsyncTrace", "ClusterEngine",
+]
+
+
+DELAY_MODELS = {
+    "bimodal": bimodal_delays,
+    "power_law": power_law_delays,
+    "exponential": exponential_delays,
+    "multimodal": multimodal_delays,
+    "constant": constant_delays,
+}
+
+
+def make_delay_model(name: str, **kw) -> DelayModel:
+    if name not in DELAY_MODELS:
+        raise KeyError(f"unknown delay model '{name}'; have "
+                       f"{sorted(DELAY_MODELS)}")
+    return DELAY_MODELS[name](**kw)
+
+
+# ---------------------------------------------------------------------------
+# Active-set policies: which workers does the master wait for at iteration t?
+# ---------------------------------------------------------------------------
+
+class ActiveSetPolicy:
+    """Selects the active set A_t from this iteration's delay draw."""
+
+    def reset(self) -> None:
+        """Called once per schedule; clear any cross-iteration state."""
+
+    def select(self, t: int, delays: np.ndarray,
+               prev_active: np.ndarray | None) -> np.ndarray:
+        raise NotImplementedError
+
+
+class FastestK(ActiveSetPolicy):
+    """Wait for the k smallest delays — the paper's default master (§3.1)."""
+
+    def __init__(self, k: int):
+        self.k = int(k)
+
+    def select(self, t, delays, prev_active):
+        return np.sort(fastest_k(delays, self.k))
+
+
+class AdaptiveK(ActiveSetPolicy):
+    """Paper §3.3: grow k until the overlap with A_{t-1} exceeds m/beta, so
+    the L-BFGS overlap matrix stays full rank."""
+
+    def __init__(self, beta: float, k_min: int = 1):
+        self.beta = float(beta)
+        self.k_min = int(k_min)
+
+    def select(self, t, delays, prev_active):
+        return adaptive_k(delays, prev_active, self.beta, self.k_min)
+
+
+class Deadline(ActiveSetPolicy):
+    """Wait a fixed time budget per iteration: every worker whose delay is
+    within ``deadline`` makes the cut; fall back to fastest-``k_min`` when
+    the round was universally slow."""
+
+    def __init__(self, deadline: float, k_min: int = 1):
+        self.deadline = float(deadline)
+        self.k_min = int(k_min)
+
+    def select(self, t, delays, prev_active):
+        active = np.nonzero(delays <= self.deadline)[0]
+        if active.size < self.k_min:
+            active = fastest_k(delays, self.k_min)
+        return np.sort(active)
+
+
+class AdversarialRotation(ActiveSetPolicy):
+    """Deterministic worst-case rotation (ignores delays): the erased set
+    sweeps all workers with maximal churn — the paper's 'arbitrary {A_t}'
+    sample-path guarantee (same sequence as ``core.adversarial_sets``)."""
+
+    def __init__(self, k: int):
+        self.k = int(k)
+
+    def select(self, t, delays, prev_active):
+        m = delays.shape[0]
+        drop = m - self.k
+        start = (t * drop) % m
+        erased = (start + np.arange(drop)) % m
+        return np.setdiff1d(np.arange(m), erased)
+
+
+POLICIES = {
+    "fastest-k": FastestK,
+    "adaptive-k": AdaptiveK,
+    "deadline": Deadline,
+    "adversarial": AdversarialRotation,
+}
+
+
+def make_policy(name: str, **kw) -> ActiveSetPolicy:
+    if name not in POLICIES:
+        raise KeyError(f"unknown policy '{name}'; have {sorted(POLICIES)}")
+    return POLICIES[name](**kw)
+
+
+# ---------------------------------------------------------------------------
+# Event records
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class IterationEvent:
+    """One bulk-synchronous iteration of the simulated cluster."""
+    t: int
+    start: float              # master broadcast time
+    commit: float             # master update time (barrier + overhead)
+    active: np.ndarray        # sorted worker indices in A_t
+    arrivals: np.ndarray      # (m,) absolute arrival time of every worker
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """A realized synchronous straggler schedule: masks + wall-clock."""
+    m: int
+    masks: np.ndarray         # (T, m) float32 0/1 erasure masks
+    times: np.ndarray         # (T,) elapsed seconds at each commit
+    events: tuple             # tuple[IterationEvent, ...]
+
+    @property
+    def steps(self) -> int:
+        return self.masks.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncTrace:
+    """A realized asynchronous run: one entry per APPLIED master update."""
+    m: int
+    workers: np.ndarray        # (U,) int32   worker that produced update u
+    staleness: np.ndarray      # (U,) int32   master_version - read_version
+    read_versions: np.ndarray  # (U,) int32   parameter timestamp worker read
+    times: np.ndarray          # (U,) float64 elapsed seconds at apply
+    dropped: int               # gradients discarded for exceeding the bound
+
+    @property
+    def updates(self) -> int:
+        return self.workers.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+class ClusterEngine:
+    """Simulates an m-worker cluster under a delay model.
+
+    One engine instance = one delay environment; strategies ask it for either
+    a synchronous ``Schedule`` or an asynchronous ``AsyncTrace``.  Sampling is
+    deterministic given ``seed`` (each ``sample_*`` call re-seeds, so two
+    strategies handed the same engine config see the same delay realization —
+    fair wall-clock comparisons).
+    """
+
+    def __init__(self, delay_model: DelayModel, m: int, *,
+                 compute_time: float = 0.05, master_overhead: float = 0.01,
+                 seed: int = 0):
+        self.delay_model = delay_model
+        self.m = int(m)
+        self.compute_time = float(compute_time)
+        self.master_overhead = float(master_overhead)
+        self.seed = int(seed)
+
+    # -- synchronous (barrier) mode -------------------------------------
+
+    def sample_schedule(self, steps: int,
+                        policy: ActiveSetPolicy) -> Schedule:
+        """Realize ``steps`` BSP iterations under ``policy``.
+
+        Iteration t starts at the previous commit; worker i's gradient
+        arrives ``compute_time + delay_i`` later; the master commits at the
+        latest arrival over A_t plus ``master_overhead``.
+        """
+        rng = np.random.default_rng(self.seed)
+        policy.reset()
+        now = 0.0
+        prev_active: np.ndarray | None = None
+        masks = np.zeros((steps, self.m), dtype=np.float32)
+        times = np.zeros(steps)
+        events = []
+        for t in range(steps):
+            delays = np.asarray(self.delay_model(rng, self.m), dtype=float)
+            arrivals = now + self.compute_time + delays
+            active = np.asarray(policy.select(t, delays, prev_active))
+            commit = float(arrivals[active].max()) + self.master_overhead
+            masks[t, active] = 1.0
+            times[t] = commit
+            events.append(IterationEvent(t=t, start=now, commit=commit,
+                                         active=active, arrivals=arrivals))
+            now = commit
+            prev_active = active
+        return Schedule(self.m, masks, times, tuple(events))
+
+    # -- asynchronous (per-arrival) mode --------------------------------
+
+    def sample_async(self, updates: int, staleness_bound: int) -> AsyncTrace:
+        """Realize an async run until ``updates`` gradients are APPLIED.
+
+        Every worker loops {read w, compute for compute_time + delay, send};
+        the master applies each arriving gradient immediately (per-arrival
+        accounting — no barrier) and bumps its version counter.  A gradient
+        whose staleness ``master_version - read_version`` exceeds
+        ``staleness_bound`` is discarded (the worker's time is still spent:
+        bounded-staleness wastes work instead of corrupting the iterate),
+        so every APPLIED update satisfies the bound.
+        """
+        if staleness_bound < 0:
+            raise ValueError("staleness_bound must be >= 0")
+        rng = np.random.default_rng(self.seed)
+        read_version = np.zeros(self.m, dtype=np.int64)  # per-worker timestamp
+        version = 0
+        heap: list[tuple[float, int]] = []
+        first = np.asarray(self.delay_model(rng, self.m), dtype=float)
+        for i in range(self.m):
+            heapq.heappush(heap, (self.compute_time + first[i], i))
+
+        workers, stale, reads, times = [], [], [], []
+        dropped = 0
+        while len(workers) < updates:
+            arrival, i = heapq.heappop(heap)
+            tau = version - read_version[i]
+            if tau <= staleness_bound:
+                workers.append(i)
+                stale.append(tau)
+                reads.append(read_version[i])
+                times.append(arrival + self.master_overhead)
+                version += 1
+            else:
+                dropped += 1
+            # worker re-reads the (possibly updated) parameters and restarts
+            read_version[i] = version
+            delay = float(np.asarray(self.delay_model(rng, 1))[0])
+            heapq.heappush(heap, (arrival + self.compute_time + delay, i))
+        return AsyncTrace(
+            m=self.m,
+            workers=np.asarray(workers, dtype=np.int32),
+            staleness=np.asarray(stale, dtype=np.int32),
+            read_versions=np.asarray(reads, dtype=np.int32),
+            times=np.asarray(times),
+            dropped=dropped,
+        )

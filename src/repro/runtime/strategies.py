@@ -1,0 +1,313 @@
+"""Unified strategy interface + registry for straggler-mitigation schemes.
+
+Every scheme the paper compares (§5) — encoded GD / proximal / L-BFGS / BCD,
+uncoded synchronous, beta-replication, and asynchronous stale-gradient SGD —
+lives behind one ``Strategy`` interface: build the worker-resident problem
+for a shared ``ProblemSpec``, ask the ``ClusterEngine`` for a delay
+realization, run the fused runner, and return a wall-clock-vs-objective
+``RunResult``.  New schemes register themselves with ``@register_strategy``
+and become available to ``runtime.compare`` and the benchmarks for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.data_parallel import (make_encoded_problem,
+                                      original_objective)
+from repro.core.encoding import make_encoder, pad_rows
+from repro.core.lbfgs import run_encoded_lbfgs
+from repro.core.model_parallel import make_lifted_problem, phi_quadratic
+
+from .engine import ActiveSetPolicy, AsyncTrace, ClusterEngine, FastestK
+from .runners import scan_async, scan_bcd, scan_gd, scan_prox
+
+__all__ = [
+    "ProblemSpec", "RunResult", "Strategy", "register_strategy",
+    "get_strategy", "available_strategies",
+]
+
+
+# ---------------------------------------------------------------------------
+# Shared problem description
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ProblemSpec:
+    """The ORIGINAL (uncoded) problem every strategy is solving:
+    f(w) = 1/(2n) ||X w - y||^2 + lam * h(w)."""
+    X: np.ndarray
+    y: np.ndarray
+    lam: float = 0.05
+    h: str = "l2"            # "l2" (ridge), "l1" (lasso), "none"
+
+    @staticmethod
+    def synthetic(n: int = 512, p: int = 128, *, noise: float = 0.5,
+                  sparse: int = 0, lam: float = 0.05, h: str = "l2",
+                  seed: int = 0) -> "ProblemSpec":
+        from repro.data import lsq_dataset
+        X, y, _ = lsq_dataset(n, p, noise=noise, sparse=sparse, seed=seed)
+        return ProblemSpec(X=X, y=y, lam=lam, h=h)
+
+    @property
+    def n(self) -> int:
+        return self.X.shape[0]
+
+    @property
+    def p(self) -> int:
+        return self.X.shape[1]
+
+    def lipschitz(self) -> float:
+        """Smoothness constant of the data-fit term, max eig of X^T X / n."""
+        return float(np.linalg.eigvalsh(self.X.T @ self.X / self.n).max())
+
+    def w_star(self) -> np.ndarray:
+        """Closed-form ridge optimum (h == 'l2' only)."""
+        if self.h != "l2":
+            raise ValueError("closed form only for the ridge objective")
+        p = self.p
+        return np.linalg.solve(self.X.T @ self.X / self.n +
+                               self.lam * np.eye(p), self.X.T @ self.y / self.n)
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Wall-clock-vs-objective trace for one (strategy, delay model) cell."""
+    strategy: str
+    times: np.ndarray       # (T,) elapsed simulated seconds per record point
+    objective: np.ndarray   # (T,) objective at each record point
+    w: np.ndarray | None = None
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def final_objective(self) -> float:
+        return float(self.objective[-1])
+
+    @property
+    def wallclock(self) -> float:
+        return float(self.times[-1])
+
+    def to_record(self) -> dict:
+        """JSON-serializable record (traces included, iterate omitted)."""
+        return {
+            "strategy": self.strategy,
+            "times": [float(t) for t in self.times],
+            "objective": [float(v) for v in self.objective],
+            "final_objective": self.final_objective,
+            "wallclock_s": self.wallclock,
+            "meta": {k: (v if isinstance(v, (int, float, str, bool))
+                         else str(v)) for k, v in self.meta.items()},
+        }
+
+
+def _auto_step(spec: ProblemSpec) -> float:
+    """Safe GD step for the (possibly encoded, eps<=0.3) smooth part."""
+    return 1.0 / (1.3 * spec.lipschitz() + spec.lam)
+
+
+def _default_k(m: int) -> int:
+    return max(1, (3 * m) // 4)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, type["Strategy"]] = {}
+
+
+def register_strategy(name: str):
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def get_strategy(name: str) -> "Strategy":
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown strategy '{name}'; have "
+                       f"{available_strategies()}")
+    return _REGISTRY[name]()
+
+
+def available_strategies() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+class Strategy:
+    """One straggler-mitigation scheme. Subclasses implement ``run``."""
+
+    name = "?"
+
+    def run(self, spec: ProblemSpec, engine: ClusterEngine, *,
+            steps: int = 200, **cfg: Any) -> RunResult:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Synchronous data-parallel family (encoded / uncoded / replication)
+# ---------------------------------------------------------------------------
+
+class _SyncGradientStrategy(Strategy):
+    """Common machinery: encode rows, realize a schedule, run the fused scan."""
+
+    encoder_name = "hadamard"
+    encoder_beta = 2.0
+
+    def _policy(self, engine: ClusterEngine, cfg: dict) -> ActiveSetPolicy:
+        policy = cfg.pop("policy", None)
+        k = cfg.pop("k", None)
+        if policy is not None:
+            return policy
+        return FastestK(k if k is not None else _default_k(engine.m))
+
+    def _problem(self, spec: ProblemSpec, engine: ClusterEngine, cfg: dict):
+        enc = pad_rows(make_encoder(cfg.pop("encoder", self.encoder_name),
+                                    spec.n,
+                                    beta=cfg.pop("beta", self.encoder_beta),
+                                    seed=cfg.pop("encoder_seed", 0)),
+                       engine.m)
+        return enc, make_encoded_problem(spec.X, spec.y, enc, engine.m,
+                                         lam=spec.lam)
+
+    def run(self, spec, engine, *, steps=200, **cfg):
+        policy = self._policy(engine, cfg)
+        enc, prob = self._problem(spec, engine, cfg)
+        step_size = cfg.pop("step_size", None) or _auto_step(spec)
+        w0 = jnp.asarray(cfg.pop("w0", np.zeros(spec.p)), jnp.float32)
+        sched = engine.sample_schedule(steps, policy)
+        masks = jnp.asarray(sched.masks)
+        if spec.h == "l1":
+            w, tr = scan_prox(prob, masks, step_size, w0)
+        else:
+            w, tr = scan_gd(prob, masks, step_size, w0, h=spec.h)
+        return RunResult(
+            strategy=self.name, times=sched.times, objective=np.asarray(tr),
+            w=np.asarray(w),
+            meta={"encoder": enc.name, "beta": enc.beta,
+                  "policy": type(policy).__name__, "step_size": step_size,
+                  "mean_active": float(sched.masks.sum(1).mean())})
+
+
+@register_strategy("coded-gd")
+class CodedGD(_SyncGradientStrategy):
+    """Encoded gradient descent / ISTA (paper §2.1, Algorithms 1-2)."""
+
+
+@register_strategy("coded-prox")
+class CodedProx(_SyncGradientStrategy):
+    """Encoded proximal gradient for the l1 objective (paper Thm 5)."""
+
+    def run(self, spec, engine, *, steps=200, **cfg):
+        if spec.h != "l1":
+            raise ValueError("coded-prox requires an l1 ProblemSpec")
+        return super().run(spec, engine, steps=steps, **cfg)
+
+
+@register_strategy("uncoded")
+class UncodedSync(_SyncGradientStrategy):
+    """Synchronous uncoded baseline: S = I, fastest-k drops data (§5)."""
+    encoder_name = "uncoded"
+    encoder_beta = 1.0
+
+
+@register_strategy("replication")
+class Replication(_SyncGradientStrategy):
+    """beta-fold data replication baseline: S = [I; ...; I] (§5)."""
+    encoder_name = "replication"
+    encoder_beta = 2.0
+
+
+@register_strategy("coded-lbfgs")
+class CodedLBFGS(_SyncGradientStrategy):
+    """Encoded L-BFGS (paper Thm 4); Python-loop outer iteration (the
+    two-loop memory is host state), masks/wall-clock from the engine."""
+
+    def run(self, spec, engine, *, steps=200, **cfg):
+        if spec.h != "l2":
+            raise ValueError("coded-lbfgs requires the ridge objective")
+        policy = self._policy(engine, cfg)
+        enc, prob = self._problem(spec, engine, cfg)
+        memory = cfg.pop("memory", 10)
+        sched = engine.sample_schedule(steps, policy)
+        w, tr = run_encoded_lbfgs(prob, sched.masks, memory=memory)
+        return RunResult(
+            strategy=self.name, times=sched.times, objective=np.asarray(tr),
+            w=np.asarray(w),
+            meta={"encoder": enc.name, "beta": enc.beta, "memory": memory,
+                  "policy": type(policy).__name__})
+
+
+@register_strategy("coded-bcd")
+class CodedBCD(_SyncGradientStrategy):
+    """Encoded block coordinate descent (model parallelism, paper §2.2).
+
+    Encodes the FEATURE dimension and minimizes phi(Xw) = 1/(2n)||Xw - y||^2
+    (no regularizer — the lifted geometry is exact, Thm 6); the reported
+    objective is phi, noted in ``meta``.
+    """
+
+    def run(self, spec, engine, *, steps=200, **cfg):
+        policy = self._policy(engine, cfg)
+        enc = pad_rows(make_encoder(cfg.pop("encoder", "hadamard"), spec.p,
+                                    beta=cfg.pop("beta", 2.0),
+                                    seed=cfg.pop("encoder_seed", 0)),
+                       engine.m)
+        val, grad = phi_quadratic(spec.y)
+        prob = make_lifted_problem(spec.X, enc, engine.m, val, grad)
+        # Hessian of the lifted quadratic is S X^T X S^T / n, norm <= beta * L
+        step_size = cfg.pop("step_size", None) or \
+            0.9 / (spec.lipschitz() * float(enc.beta))
+        v0 = jnp.zeros((engine.m, prob.XS.shape[-1]), jnp.float32)
+        sched = engine.sample_schedule(steps, policy)
+        v, tr = scan_bcd(prob, jnp.asarray(sched.masks), step_size, v0)
+        # align: tr[t+1] is the objective AFTER commit t (length T+1)
+        return RunResult(
+            strategy=self.name, times=sched.times,
+            objective=np.asarray(tr)[1:], w=np.asarray(v),
+            meta={"encoder": enc.name, "beta": enc.beta,
+                  "objective": "phi(Xw) (unregularized, exact-optimum family)",
+                  "step_size": step_size})
+
+
+# ---------------------------------------------------------------------------
+# Asynchronous stale-gradient SGD (the missing baseline from the abstract)
+# ---------------------------------------------------------------------------
+
+@register_strategy("async")
+class AsyncSGD(Strategy):
+    """Asynchronous stale-gradient SGD with bounded staleness (paper §5).
+
+    Uncoded row partition; every arriving worker gradient is applied
+    immediately (per-arrival wall-clock — no barrier), computed at the iterate
+    that worker last read (per-worker parameter timestamps).  Gradients staler
+    than ``staleness_bound`` are discarded by the engine, so the device runner
+    only ever sees bounded staleness.
+    """
+
+    def run(self, spec, engine, *, steps=200, **cfg):
+        if spec.h == "l1":
+            raise ValueError("async baseline covers smooth objectives only")
+        m = engine.m
+        bound = int(cfg.pop("staleness_bound", 2 * m))
+        updates = int(cfg.pop("updates", steps * m))
+        step_size = (cfg.pop("step_size", None) or _auto_step(spec)) / m
+        enc = pad_rows(make_encoder("uncoded", spec.n, beta=1.0), m)
+        prob = make_encoded_problem(spec.X, spec.y, enc, m, lam=spec.lam)
+        trace: AsyncTrace = engine.sample_async(updates, bound)
+        w0 = jnp.asarray(cfg.pop("w0", np.zeros(spec.p)), jnp.float32)
+        w, tr = scan_async(prob, jnp.asarray(trace.workers),
+                           jnp.asarray(trace.staleness), step_size, w0,
+                           buffer_size=bound + 1, h=spec.h)
+        return RunResult(
+            strategy=self.name, times=trace.times, objective=np.asarray(tr),
+            w=np.asarray(w),
+            meta={"staleness_bound": bound, "updates": updates,
+                  "dropped": trace.dropped,
+                  "mean_staleness": float(trace.staleness.mean()),
+                  "max_staleness": int(trace.staleness.max()),
+                  "step_size": step_size})
