@@ -13,10 +13,11 @@ import time
 def main() -> None:
     from . import (bench_spectrum, bench_ridge, bench_lasso, bench_logistic,
                    bench_matrix_factorization, bench_kernels, bench_coded_lm,
-                   bench_runtime)
+                   bench_runtime, bench_encoding)
     print("name,us_per_call,derived")
     suites = [
         ("spectrum (paper Figs 5-6)", bench_spectrum.run),
+        ("encoding operators (matrix-free, DESIGN §7)", bench_encoding.run),
         ("ridge L-BFGS (paper Fig 7)", bench_ridge.run),
         ("lasso proximal (paper Fig 14)", bench_lasso.run),
         ("logistic BCD (paper Figs 10-13)", bench_logistic.run),

@@ -16,8 +16,11 @@ from repro.runtime.compare import run_matrix
 STRATEGIES = ["coded-gd", "uncoded", "replication", "async"]
 DELAYS = ["bimodal", "power_law", "exponential"]
 
+# coded strategies encode with the MATRIX-FREE fast-Hadamard operator
+# (fused Pallas FWHT; same ensemble as the dense 'hadamard' encoder, but S
+# is never materialized — see DESIGN §7)
 records = run_matrix(STRATEGIES, DELAYS, n=512, p=128, m=16, k=12,
-                     steps=150, seed=0)
+                     steps=150, seed=0, encoder="fast-hadamard")
 
 # time (simulated seconds) for each strategy to first reach 1.01x the best
 # final objective seen under that delay model

@@ -4,11 +4,14 @@ Encoding matrices (ETF/Hadamard/Haar/Gaussian), straggler delay models,
 and the four encoded algorithms (GD, L-BFGS, proximal gradient, BCD) with
 fastest-k erasure semantics.
 """
-from .encoding import (Encoder, make_encoder, gaussian_encoder,
-                       hadamard_encoder, haar_encoder, paley_etf_encoder,
-                       steiner_etf_encoder, replication_encoder,
-                       identity_encoder, partition_rows, pad_rows, brip_constant,
-                       subset_spectrum, hadamard_matrix)
+from .encoding import (LinearEncoder, Encoder, DenseEncoder, as_dense,
+                       make_encoder, register_encoder, available_encoders,
+                       gaussian_encoder, hadamard_encoder, haar_encoder,
+                       paley_etf_encoder, steiner_etf_encoder,
+                       replication_encoder, identity_encoder, partition_rows,
+                       pad_rows, brip_constant, subset_spectrum,
+                       hadamard_matrix)
+from .operators import FastHadamardEncoder, BlockDiagonalEncoder
 from .straggler import (bimodal_delays, power_law_delays, exponential_delays,
                         multimodal_delays, constant_delays, fastest_k,
                         active_mask, adversarial_sets, simulate_run, WallClock,

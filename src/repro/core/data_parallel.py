@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .encoding import Encoder, partition_rows
+from .encoding import LinearEncoder
 
 __all__ = [
     "EncodedProblem", "make_encoded_problem", "encoded_gradients",
@@ -51,13 +51,24 @@ class EncodedProblem:
         return self.SX.shape[0]
 
 
-def make_encoded_problem(X: np.ndarray, y: np.ndarray, enc: Encoder, m: int,
-                         lam: float = 0.0, dtype=jnp.float32) -> EncodedProblem:
-    blocks = partition_rows(enc, m)                    # (m, r, n)
-    SX = np.einsum("mrn,np->mrp", blocks, X)
-    Sy = np.einsum("mrn,n->mr", blocks, y)
+def make_encoded_problem(X: np.ndarray, y: np.ndarray, enc: LinearEncoder,
+                         m: int, lam: float = 0.0,
+                         dtype=jnp.float32) -> EncodedProblem:
+    """Build the worker-stacked encoded problem from any encoding operator.
+
+    Per-worker blocks are built via ``enc.encode_partitioned`` (by default
+    one lazy ``worker_block`` per worker) — S is never materialized and
+    structured encoders only touch the input coordinates each worker's
+    rows depend on (``input_slice``).  X and y are encoded jointly as one
+    (n, p+1) pass, since the operator acts columnwise.
+    """
+    enc = enc.with_workers(m)
+    Xy = np.concatenate([np.asarray(X, np.float64),
+                         np.asarray(y, np.float64)[:, None]], axis=1)
+    SXy = np.stack([np.asarray(b, np.float64)
+                    for b in enc.encode_partitioned(Xy)])  # (m, r, p+1)
     return EncodedProblem(
-        SX=jnp.asarray(SX, dtype), Sy=jnp.asarray(Sy, dtype),
+        SX=jnp.asarray(SXy[..., :-1], dtype), Sy=jnp.asarray(SXy[..., -1], dtype),
         X=jnp.asarray(X, dtype), y=jnp.asarray(y, dtype),
         lam=float(lam), beta=float(enc.beta), n=X.shape[0])
 

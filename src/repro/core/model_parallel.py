@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .encoding import Encoder
+from .encoding import LinearEncoder
 
 __all__ = ["LiftedProblem", "make_lifted_problem", "phi_quadratic",
            "phi_logistic", "run_encoded_bcd"]
@@ -42,14 +42,17 @@ class LiftedProblem:
         return self.XS.shape[0]
 
 
-def make_lifted_problem(X: np.ndarray, enc: Encoder, m: int, phi_val, phi_grad,
-                        dtype=jnp.float32) -> LiftedProblem:
+def make_lifted_problem(X: np.ndarray, enc: LinearEncoder, m: int, phi_val,
+                        phi_grad, dtype=jnp.float32) -> LiftedProblem:
     # S is (beta*p, p) here: encoding acts on the FEATURE dimension.
     p = X.shape[1]
     if enc.n != p:
         raise ValueError(f"encoder dim {enc.n} != feature dim {p}")
-    blocks = enc.S.reshape(m, enc.rows // m, p)        # (m, pb, p) rows of S
-    XS = np.einsum("np,mbp->mnb", X, blocks)           # X S_i^T
+    enc = enc.with_workers(m)
+    # X S_i^T = (S_i X^T)^T — each worker's column block from the
+    # partitioned encode of X^T, matrix-free.
+    XS = np.stack([np.asarray(b, np.float64).T
+                   for b in enc.encode_partitioned(np.asarray(X).T)])
     return LiftedProblem(jnp.asarray(XS, dtype), phi_val, phi_grad,
                          float(enc.beta))
 

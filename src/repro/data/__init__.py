@@ -1,1 +1,2 @@
-from .pipeline import TokenStream, CodedBatcher, lsq_dataset
+from .pipeline import (TokenStream, CodedBatcher, lsq_dataset, lsq_rows,
+                       stream_worker_blocks)

@@ -18,7 +18,8 @@ import numpy as np
 
 from ..core.gradient_coding import FRCode, coded_weights
 
-__all__ = ["TokenStream", "CodedBatcher", "lsq_dataset"]
+__all__ = ["TokenStream", "CodedBatcher", "lsq_dataset", "lsq_rows",
+           "stream_worker_blocks"]
 
 
 @dataclasses.dataclass
@@ -38,13 +39,17 @@ class TokenStream:
 
     def sample(self, rng: np.random.Generator, n: int, seq: int) -> np.ndarray:
         toks = rng.choice(self.vocab, size=(n, seq + 1), p=self._probs)
-        # Insert learnable motifs with 50% probability per sequence.
+        # Insert learnable motifs with 50% probability per sequence —
+        # vectorized (one fancy-indexed write for the whole batch; the
+        # per-sequence Python loop dominated CodedBatcher hot paths).
         L = min(self.motif_len, seq + 1)
-        for i in range(n):
-            if rng.random() < 0.5:
-                m = self._motifs[rng.integers(self.n_motifs)][:L]
-                start = rng.integers(0, seq + 2 - L)
-                toks[i, start:start + L] = m
+        insert = rng.random(n) < 0.5
+        motif_ids = rng.integers(0, self.n_motifs, size=n)
+        starts = rng.integers(0, seq + 2 - L, size=n)
+        rows = np.nonzero(insert)[0]
+        if rows.size:
+            cols = starts[rows, None] + np.arange(L)[None, :]
+            toks[rows[:, None], cols] = self._motifs[motif_ids[rows], :L]
         return toks.astype(np.int32)
 
 
@@ -90,3 +95,63 @@ def lsq_dataset(n: int, p: int, *, noise: float = 0.1, sparse: int = 0,
         w = rng.standard_normal(p)
     y = X @ w + noise * rng.standard_normal(n)
     return X, y, w
+
+
+# ---------------------------------------------------------------------------
+# Streaming blocked encode (DESIGN §7): data larger than host memory
+# ---------------------------------------------------------------------------
+
+_LSQ_CHUNK = 4096  # virtual-dataset chunk size; any row range assembles from
+                   # whole chunks, so generation is deterministic per (seed,
+                   # chunk) regardless of access order or range boundaries.
+
+
+def lsq_rows(lo: int, hi: int, p: int, *, noise: float = 0.1,
+             sparse: int = 0, seed: int = 0):
+    """Rows [lo, hi) of a VIRTUAL least-squares dataset, in O(hi - lo) memory.
+
+    Unlike ``lsq_dataset`` (one rng stream — rows depend on everything
+    before them), every ``_LSQ_CHUNK``-row chunk here gets its own
+    counter-keyed generator, so any shard of an arbitrarily large dataset
+    can be produced independently: the enabler for streaming blocked encode.
+    Returns (X_rows, y_rows, w) with the SAME ground-truth w for every call.
+    """
+    rng_w = np.random.default_rng([seed, 0])
+    if sparse:
+        w = np.zeros(p)
+        idx = rng_w.choice(p, size=sparse, replace=False)
+        w[idx] = rng_w.standard_normal(sparse) * 2.0
+    else:
+        w = rng_w.standard_normal(p)
+    xs, ys = [], []
+    for c in range(lo // _LSQ_CHUNK, -(-hi // _LSQ_CHUNK) if hi > lo else 0):
+        rng = np.random.default_rng([seed, 1 + c])
+        Xc = rng.standard_normal((_LSQ_CHUNK, p))
+        yc = Xc @ w + noise * rng.standard_normal(_LSQ_CHUNK)
+        a = max(lo - c * _LSQ_CHUNK, 0)
+        b = min(hi - c * _LSQ_CHUNK, _LSQ_CHUNK)
+        xs.append(Xc[a:b])
+        ys.append(yc[a:b])
+    if not xs:
+        return np.zeros((0, p)), np.zeros(0), w
+    return np.concatenate(xs), np.concatenate(ys), w
+
+
+def stream_worker_blocks(enc, m: int, rows_fn):
+    """Encode worker-by-worker without ever holding the full dataset.
+
+    ``enc`` is any ``LinearEncoder``; ``rows_fn(lo, hi)`` returns the raw
+    data rows [lo, hi) as an ``(hi - lo, q)`` array.  For each worker the
+    generator materializes ONLY the input coordinates that worker's encoded
+    rows depend on (``enc.input_slice``) and yields
+    ``(i, S_i X)``.  With a block-diagonal encoder each worker touches one
+    shard, so peak memory is one shard + one encoded block — data whose
+    dense encoding matrix (or even X itself) exceeds host memory streams
+    through.  Mixing encoders (dense, fast-hadamard) declare a full-width
+    input slice and degrade to whole-dataset pulls.
+    """
+    enc = enc.with_workers(m)
+    for i in range(m):
+        sl = enc.input_slice(i)
+        yield i, np.asarray(enc.worker_block_local(i, rows_fn(sl.start,
+                                                              sl.stop)))

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: fused SRHT-style encode (sign-flip + FWHT + row gather).
+
+The paper's efficient encoder (§4.2.2) is  S X = H_N[:, cols] diag(signs) X
+/ sqrt(n)  — never materialized.  Written along the transform axis this is
+
+    (S X)[lo:hi] = (FWHT(D_pad · X_pad))[lo:hi] / sqrt(n)
+
+where ``X_pad`` is the data scattered into its N padded positions and
+``D_pad`` is the sign vector scattered likewise (zero on dead rows).  The
+kernel fuses the three post-scatter stages into ONE pallas_call, one HBM
+round-trip per tile:
+
+  1. sign-flip: multiply the (BLOCK_ROWS, N) tile by the broadcast sign row
+     (zeros kill any stray values in dead lanes — the zero-pad is enforced
+     here, not trusted from the caller);
+  2. all log2(N) FWHT butterfly stages in VMEM (same layout as fwht.py);
+  3. row gather: only the contiguous encoded-row window [lo, hi) — a worker
+     block, or the full frame — is scaled and written back to HBM.
+
+The transform axis is the trailing (lane) axis: callers pass X^T so encoded
+ROWS become output lanes and the gather is a static lane slice.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fwht import butterfly, default_interpret, pick_block_rows
+
+__all__ = ["srht_encode_call"]
+
+
+def _srht_body(x_ref, d_ref, o_ref, *, n: int, lo: int, hi: int,
+               scale: float):
+    x = butterfly(x_ref[...].astype(jnp.float32) *
+                  d_ref[...].astype(jnp.float32), n)
+    o_ref[...] = (x[:, lo:hi] * scale).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("lo", "hi", "scale",
+                                             "block_rows", "interpret"))
+def srht_encode_call(xt: jax.Array, dsigns: jax.Array, *, lo: int, hi: int,
+                     scale: float, block_rows: int | None = None,
+                     interpret: bool | None = None) -> jax.Array:
+    """Fused sign-flip + FWHT + row-window encode.
+
+    xt:     (p, N) — data columns as rows, already scattered into the N
+            padded transform positions (zeros elsewhere).
+    dsigns: (1, N) — random signs at live positions, ZERO at dead ones.
+    Returns (p, hi - lo): encoded rows [lo, hi) of S X, transposed.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    rows, n = xt.shape
+    if n & (n - 1):
+        raise ValueError(f"transform length {n} is not a power of two")
+    if not (0 <= lo < hi <= n):
+        raise ValueError(f"row window [{lo}, {hi}) outside [0, {n})")
+    if dsigns.shape != (1, n):
+        raise ValueError(f"dsigns shape {dsigns.shape} != (1, {n})")
+    br = block_rows or pick_block_rows(rows, n, xt.dtype.itemsize)
+    if rows % br:
+        raise ValueError(f"rows {rows} not divisible by block_rows {br}")
+    return pl.pallas_call(
+        functools.partial(_srht_body, n=n, lo=lo, hi=hi, scale=scale),
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, n), lambda i: (i, 0)),
+                  pl.BlockSpec((1, n), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((br, hi - lo), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, hi - lo), xt.dtype),
+        interpret=interpret,
+    )(xt, dsigns)

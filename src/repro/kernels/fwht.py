@@ -9,7 +9,8 @@ axis is the trailing (lane) axis, padded to multiples of 128 by construction
 (N is a power of two >= 128 in every production encode).
 
 Grid: one program per row block.  BLOCK_ROWS is chosen so the tile plus its
-double-buffer fits comfortably in ~16 MB VMEM.
+double-buffer fits an 8 MB VMEM budget (half of the ~16 MB per core, leaving
+headroom for the compiler's own buffers).
 """
 from __future__ import annotations
 
@@ -19,7 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["fwht_kernel_call", "pick_block_rows"]
+__all__ = ["fwht_kernel_call", "pick_block_rows", "butterfly",
+           "default_interpret"]
 
 
 def pick_block_rows(rows: int, n: int, dtype_bytes: int = 4,
@@ -34,9 +36,10 @@ def pick_block_rows(rows: int, n: int, dtype_bytes: int = 4,
     return max(br, 1)
 
 
-def _fwht_body(x_ref, o_ref, *, n: int):
-    """In-VMEM butterfly over the trailing axis (length n, power of two)."""
-    x = x_ref[...].astype(jnp.float32)        # (BR, n)
+def butterfly(x: jax.Array, n: int) -> jax.Array:
+    """All log2(n) FWHT butterfly stages over the trailing axis of a
+    (rows, n) float32 tile — shared by every kernel body that transforms
+    in VMEM (fwht.py, encode.py)."""
     br = x.shape[0]
     h = 1
     while h < n:
@@ -46,17 +49,32 @@ def _fwht_body(x_ref, o_ref, *, n: int):
         b = y[:, :, 1, :]
         x = jnp.stack([a + b, a - b], axis=2).reshape(br, n)
         h *= 2
+    return x
+
+
+def default_interpret() -> bool:
+    """Interpret everywhere but real TPUs — the kernels assume the TPU
+    lane layout, so GPU backends validate in interpret mode like CPU (the
+    same policy as ops.on_tpu)."""
+    return jax.default_backend() != "tpu"
+
+
+def _fwht_body(x_ref, o_ref, *, n: int):
+    """In-VMEM butterfly over the trailing axis (length n, power of two)."""
+    x = butterfly(x_ref[...].astype(jnp.float32), n)    # (BR, n)
     o_ref[...] = x.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
 def fwht_kernel_call(x: jax.Array, *, block_rows: int | None = None,
-                     interpret: bool = True) -> jax.Array:
+                     interpret: bool | None = None) -> jax.Array:
     """FWHT along the last axis of x: (rows, n) -> (rows, n).
 
-    n must be a power of two.  interpret=True executes the kernel body in
-    Python on CPU (validation mode); on TPU pass interpret=False.
+    n must be a power of two.  interpret=None (default) picks the mode from
+    the backend: compiled Mosaic on TPU, interpreted elsewhere.
     """
+    if interpret is None:
+        interpret = default_interpret()
     rows, n = x.shape
     if n & (n - 1):
         raise ValueError(f"FWHT length {n} is not a power of two")

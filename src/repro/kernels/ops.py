@@ -12,9 +12,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from .coded_reduce import coded_combine_call
+from .encode import srht_encode_call
 from .fwht import fwht_kernel_call
 
-__all__ = ["on_tpu", "fwht", "hadamard_encode", "coded_combine"]
+__all__ = ["on_tpu", "fwht", "hadamard_encode", "srht_encode",
+           "coded_combine"]
 
 
 def on_tpu() -> bool:
@@ -31,21 +33,48 @@ def fwht(x: jax.Array, axis: int = -1) -> jax.Array:
     return jnp.moveaxis(out.reshape(lead + (x.shape[-1],)), -1, axis)
 
 
+def srht_encode(X: jax.Array, cols: np.ndarray, signs: np.ndarray, N: int,
+                lo: int = 0, hi: int | None = None) -> jax.Array:
+    """Rows [lo, hi) of  S X = H_N[:, cols] diag(signs) X / sqrt(n)  for data
+    X (n, p) — the matrix-free SRHT encode (paper §4.2.2).
+
+    One XLA scatter places the data columns into their N transform positions;
+    the fused Pallas kernel (kernels/encode.py) then does sign-flip + all
+    FWHT butterfly stages + the contiguous row gather in a single pass.
+    Returns (hi - lo, p); S is never formed.
+    """
+    n, p = X.shape
+    hi = N if hi is None else hi
+    xt = jnp.zeros((p, N), X.dtype).at[:, jnp.asarray(cols)].set(X.T)
+    dsigns = jnp.zeros((1, N), X.dtype).at[0, jnp.asarray(cols)].set(
+        jnp.asarray(signs, X.dtype))
+    # pad the grid axis (data columns) up to a whole number of row blocks:
+    # the budget-limited block (pick_block_rows with an always-divisible row
+    # count) capped at the next power of two covering p
+    from .fwht import pick_block_rows
+    br = min(pick_block_rows(1 << 30, N, xt.dtype.itemsize),
+             1 << max(p - 1, 1).bit_length())
+    pad = (-p) % br
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    out = srht_encode_call(xt, dsigns, lo=lo, hi=hi,
+                           scale=1.0 / math.sqrt(n), block_rows=br,
+                           interpret=not on_tpu())
+    return out[:p].T
+
+
 def hadamard_encode(X: jax.Array, cols: np.ndarray, signs: np.ndarray,
                     N: int | None = None) -> jax.Array:
     """Encode data X (n, p) with the randomized Hadamard ensemble:
 
         S X = H_N[:, cols] diag(signs) X / sqrt(n)
 
-    computed as FWHT over the zero-padded, sign-flipped rows (paper §4.2.2) —
+    via the fused sign-flip + FWHT + gather kernel (paper §4.2.2) —
     no S materialization.  Returns (N, p).
     """
     n, p = X.shape
     N = N or 1 << (2 * n - 1).bit_length()  # default beta ~= 2 padding
-    padded = jnp.zeros((N, p), X.dtype)
-    padded = padded.at[jnp.asarray(cols)].set(
-        X * jnp.asarray(signs, X.dtype)[:, None])
-    return fwht(padded, axis=0) / math.sqrt(n)
+    return srht_encode(X, cols, signs, N)
 
 
 def coded_combine(g: jax.Array, c: jax.Array) -> jax.Array:

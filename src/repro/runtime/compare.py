@@ -9,6 +9,11 @@ consume ``run_matrix`` / the emitted files instead of hand-rolling loops.
     PYTHONPATH=src python -m repro.runtime.compare \\
         --strategies coded-gd,uncoded,replication,async \\
         --delays bimodal,power_law,exponential
+
+``--encoder`` accepts any registry name, including the matrix-free operator
+encoders ('fast-hadamard', 'block-diagonal') — those encode without ever
+materializing S, so the same matrix runs at data sizes where the dense
+``(beta*n, n)`` construction cannot be allocated.
 """
 from __future__ import annotations
 
@@ -19,6 +24,8 @@ import os
 from typing import Sequence
 
 import numpy as np
+
+from repro.core.encoding import available_encoders
 
 from .engine import ClusterEngine, make_delay_model, make_policy
 from .strategies import ProblemSpec, RunResult, available_strategies, \
@@ -115,7 +122,10 @@ def main(argv: Sequence[str] | None = None) -> list[dict]:
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--lam", type=float, default=0.05)
     ap.add_argument("--h", default="l2", choices=["l2", "l1", "none"])
-    ap.add_argument("--encoder", default="hadamard")
+    ap.add_argument("--encoder", default="hadamard",
+                    help=f"encoder for coded strategies, from "
+                         f"{available_encoders()} (operator encoders are "
+                         f"matrix-free)")
     ap.add_argument("--policy", default="fastest-k",
                     choices=["fastest-k", "adaptive-k", "deadline",
                              "adversarial"])

@@ -18,7 +18,8 @@ import numpy as np
 
 from repro.core.data_parallel import (make_encoded_problem,
                                       original_objective)
-from repro.core.encoding import make_encoder, pad_rows
+from repro.core.encoding import LinearEncoder, make_encoder
+from repro.core import operators  # noqa: F401  (registers matrix-free encoders)
 from repro.core.lbfgs import run_encoded_lbfgs
 from repro.core.model_parallel import make_lifted_problem, phi_quadratic
 
@@ -112,6 +113,18 @@ def _default_k(m: int) -> int:
     return max(1, (3 * m) // 4)
 
 
+def _resolve_encoder(encoder, n: int, *, beta: float, seed: int,
+                     m: int) -> LinearEncoder:
+    """Accept an encoder by registry name OR as a LinearEncoder instance
+    (operator encoders flow through the strategy layer unchanged), bound to
+    the engine's worker count."""
+    if isinstance(encoder, LinearEncoder):
+        if encoder.n != n:
+            raise ValueError(f"encoder dim {encoder.n} != problem dim {n}")
+        return encoder.with_workers(m)
+    return make_encoder(encoder, n, beta=beta, seed=seed).with_workers(m)
+
+
 # ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------
@@ -166,11 +179,10 @@ class _SyncGradientStrategy(Strategy):
         return FastestK(k if k is not None else _default_k(engine.m))
 
     def _problem(self, spec: ProblemSpec, engine: ClusterEngine, cfg: dict):
-        enc = pad_rows(make_encoder(cfg.pop("encoder", self.encoder_name),
-                                    spec.n,
-                                    beta=cfg.pop("beta", self.encoder_beta),
-                                    seed=cfg.pop("encoder_seed", 0)),
-                       engine.m)
+        enc = _resolve_encoder(cfg.pop("encoder", self.encoder_name), spec.n,
+                               beta=cfg.pop("beta", self.encoder_beta),
+                               seed=cfg.pop("encoder_seed", 0),
+                               m=engine.m)
         return enc, make_encoded_problem(spec.X, spec.y, enc, engine.m,
                                          lam=spec.lam)
 
@@ -253,10 +265,9 @@ class CodedBCD(_SyncGradientStrategy):
 
     def run(self, spec, engine, *, steps=200, **cfg):
         policy = self._policy(engine, cfg)
-        enc = pad_rows(make_encoder(cfg.pop("encoder", "hadamard"), spec.p,
-                                    beta=cfg.pop("beta", 2.0),
-                                    seed=cfg.pop("encoder_seed", 0)),
-                       engine.m)
+        enc = _resolve_encoder(cfg.pop("encoder", "hadamard"), spec.p,
+                               beta=cfg.pop("beta", 2.0),
+                               seed=cfg.pop("encoder_seed", 0), m=engine.m)
         val, grad = phi_quadratic(spec.y)
         prob = make_lifted_problem(spec.X, enc, engine.m, val, grad)
         # Hessian of the lifted quadratic is S X^T X S^T / n, norm <= beta * L
@@ -296,7 +307,7 @@ class AsyncSGD(Strategy):
         bound = int(cfg.pop("staleness_bound", 2 * m))
         updates = int(cfg.pop("updates", steps * m))
         step_size = (cfg.pop("step_size", None) or _auto_step(spec)) / m
-        enc = pad_rows(make_encoder("uncoded", spec.n, beta=1.0), m)
+        enc = make_encoder("uncoded", spec.n, beta=1.0).with_workers(m)
         prob = make_encoded_problem(spec.X, spec.y, enc, m, lam=spec.lam)
         trace: AsyncTrace = engine.sample_async(updates, bound)
         w0 = jnp.asarray(cfg.pop("w0", np.zeros(spec.p)), jnp.float32)
