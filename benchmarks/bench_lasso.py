@@ -2,64 +2,53 @@
 gradient under the multimodal delay distribution.
 
 Schemes: uncoded k=m (slow, exact), uncoded k<m (fast, lossy), replication
-k<m, Steiner/Hadamard-coded k<m (fast AND accurate).
+k<m, Steiner/Hadamard-coded k<m (fast AND accurate), each also under the
+adversarial rotation.  Data, ground truth (FISTA optimum + planted support)
+and the F1 metric come from the ``lasso`` workload — this module only
+enumerates the scheme table and emits CSV.
 """
 from __future__ import annotations
 
-import numpy as np
-import jax.numpy as jnp
+import time
 
-from repro.core import (make_encoder, pad_rows, make_encoded_problem,
-                        run_encoded_proximal, multimodal_delays)
-from repro.data import lsq_dataset
-from .common import emit, masks_from_delays
+from repro.runtime import AdversarialRotation
+from repro.workloads import get_workload
 
-
-def _f1(w_hat, w_true, tol=1e-3):
-    nz_hat = np.abs(w_hat) > tol
-    nz_true = np.abs(w_true) > 0
-    tp = (nz_hat & nz_true).sum()
-    prec = tp / max(nz_hat.sum(), 1)
-    rec = tp / max(nz_true.sum(), 1)
-    return 2 * prec * rec / max(prec + rec, 1e-9)
+from .common import emit
 
 
-def run(n: int = 1024, p: int = 512, s: int = 40, m: int = 32,
-        steps: int = 250, lam: float = 0.08):
-    X, y, w_true = lsq_dataset(n, p, noise=0.4, sparse=s, seed=0)
-    L = np.linalg.eigvalsh(X.T @ X / n).max()
+def run(preset: str = "bench"):
+    wl = get_workload("lasso")
+    ps = wl.preset(preset)
+    data = wl.build(ps)
+    engine = wl.default_engine(ps)
+    m = ps.m
+    k = (3 * m) // 4
+
+    schemes = [
+        (f"uncoded_k{m}", "uncoded", {"k": m}),
+        (f"uncoded_k{k}", "uncoded", {"k": k}),
+        (f"replication_k{k}", "replication", {"k": k}),
+        (f"steiner_k{k}", "coded-prox", {"k": k, "encoder": "steiner"}),
+        (f"hadamard_k{k}", "coded-prox", {"k": k, "encoder": "hadamard"}),
+        (f"uncoded_k{k}_adv", "uncoded", {"policy": AdversarialRotation(k)}),
+        (f"replication_k{k}_adv", "replication",
+         {"policy": AdversarialRotation(k)}),
+        (f"steiner_k{k}_adv", "coded-prox",
+         {"policy": AdversarialRotation(k), "encoder": "steiner"}),
+        (f"hadamard_k{k}_adv", "coded-prox",
+         {"policy": AdversarialRotation(k), "encoder": "hadamard"}),
+    ]
     results = []
-    for name, enc_name, k, sched in [
-            ("uncoded_k32", "uncoded", 32, "rand"),
-            ("uncoded_k24", "uncoded", 24, "rand"),
-            ("replication_k24", "replication", 24, "rand"),
-            ("steiner_k24", "steiner", 24, "rand"),
-            ("hadamard_k24", "hadamard", 24, "rand"),
-            ("uncoded_k24_adv", "uncoded", 24, "adv"),
-            ("replication_k24_adv", "replication", 24, "adv"),
-            ("steiner_k24_adv", "steiner", 24, "adv"),
-            ("hadamard_k24_adv", "hadamard", 24, "adv")]:
-        enc = make_encoder(enc_name, n,
-                           beta=1.0 if enc_name == "uncoded" else 2.0)
-        enc = pad_rows(enc, m)
-        prob = make_encoded_problem(X, y, enc, m, lam=lam)
-        if sched == "adv":
-            from repro.core import adversarial_sets, active_mask
-            masks = np.stack([active_mask(m, A) for A in
-                              adversarial_sets(m, k, steps)])
-            times = np.cumsum(np.full(steps, 1.0))
-        else:
-            masks, times = masks_from_delays(multimodal_delays(), m, k,
-                                             steps, seed=3)
-        import time
+    for name, strategy, cfg in schemes:
         t0 = time.perf_counter()
-        w, tr = run_encoded_proximal(prob, masks, step_size=0.5 / L)
-        us = (time.perf_counter() - t0) / steps * 1e6
-        f1 = _f1(np.asarray(w), w_true)
+        res = wl.run(strategy, engine, preset=ps, data=data, **cfg)
+        us = (time.perf_counter() - t0) / ps.steps * 1e6
         emit(f"lasso_{name}", us,
-             f"f1={f1:.3f};final_obj={tr[-1]:.4f};"
-             f"sim_wallclock_s={times[-1]:.1f}")
-        results.append((name, f1, tr[-1], times[-1]))
+             f"f1={res.final_metric:.3f};final_obj={res.final_objective:.4f};"
+             f"sim_wallclock_s={res.wallclock:.1f}")
+        results.append((name, res.final_metric, res.final_objective,
+                        res.wallclock))
     return results
 
 

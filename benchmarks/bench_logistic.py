@@ -1,91 +1,52 @@
 """Paper Figs 10-13: l2-logistic regression via encoded block coordinate
 descent (model parallelism), rcv1-like synthetic sparse features.
 
-Schemes: Steiner-coded, Haar-coded, uncoded (k=m and k<m), replication, and
-an ASYNCHRONOUS stale-gradient baseline.  Two straggler models from §5.3:
-bimodal Gaussian mixture and power-law background tasks.  Reports final
-train error and simulated wall-clock to target error.
+Schemes: Steiner-coded, Haar-coded, uncoded (k=m and k<m), replication —
+each the same lifted-BCD lowering with a different feature encoder — under
+the two straggler models of §5.3 (bimodal Gaussian mixture and power-law
+background tasks).  Dataset, lowering and metrics come from the
+``logistic`` workload; the asynchronous stale-gradient baseline lives in
+the runtime's ``async`` strategy (data-parallel workloads) and is no longer
+hand-rolled here.  Reports final train loss, held-out error and simulated
+wall-clock.
 """
 from __future__ import annotations
 
-import numpy as np
-import jax
-import jax.numpy as jnp
+import time
 
-from repro.core import (make_encoder, pad_rows, make_lifted_problem, phi_logistic,
-                        run_encoded_bcd, bimodal_delays, power_law_delays)
-from .common import emit, masks_from_delays
+from repro.runtime import ClusterEngine, make_delay_model
+from repro.workloads import get_workload
 
-
-def _rcv1_like(n=512, p=256, density=0.1, seed=0):
-    rng = np.random.default_rng(seed)
-    X = (rng.random((n, p)) < density) * rng.exponential(1.0, (n, p))
-    X = X / np.maximum(np.linalg.norm(X, axis=1, keepdims=True), 1e-9)
-    w = rng.standard_normal(p)
-    labels = np.sign(X @ w + 0.05 * rng.standard_normal(n))
-    return X.astype(np.float32), labels
+from .common import emit
 
 
-def _async_bcd(X, labels, m, steps, delay_model, seed, step_size):
-    """Stale-gradient async baseline: each worker's block update is applied
-    with a staleness drawn from the delay model (discretized)."""
-    rng = np.random.default_rng(seed)
-    n, p = X.shape
-    pb = p // m
-    w = np.zeros(p, np.float32)
-    val, grad = phi_logistic(labels)
-    staleness = np.maximum(
-        1, (delay_model(rng, m) / delay_model(rng, m).min()).astype(int))
-    w_hist = [w.copy()]
-    t_elapsed = 0.0
-    delays = delay_model(rng, m)
-    for t in range(steps):
-        for i in range(m):
-            tau = min(staleness[i], len(w_hist))
-            w_old = w_hist[-tau]
-            z = jnp.asarray(X) @ jnp.asarray(w_old)
-            g = np.asarray(jnp.asarray(X).T @ grad(z))
-            sl = slice(i * pb, (i + 1) * pb)
-            w[sl] -= step_size * g[sl]
-        w_hist.append(w.copy())
-        if len(w_hist) > 30:
-            w_hist.pop(0)
-        t_elapsed += float(np.mean(delays)) / m + 0.05
-    z = jnp.asarray(X) @ jnp.asarray(w)
-    return float(val(z)), t_elapsed
+def run(preset: str = "bench"):
+    wl = get_workload("logistic")
+    ps = wl.preset(preset)
+    data = wl.build(ps)
+    m = ps.m
+    k = (3 * m) // 4
 
-
-def run(steps: int = 120, m: int = 16):
-    X, labels = _rcv1_like()
-    n, p = X.shape
-    val, gradfn = phi_logistic(labels)
+    schemes = [
+        (f"steiner_k{k}", "coded-bcd", {"k": k, "encoder": "steiner"}),
+        (f"haar_k{k}", "coded-bcd", {"k": k, "encoder": "haar"}),
+        (f"uncoded_k{m}", "uncoded", {"k": m}),
+        (f"uncoded_k{k}", "uncoded", {"k": k}),
+        (f"replication_k{k}", "replication", {"k": k}),
+    ]
     results = []
-    for delay_name, model in [("bimodal", bimodal_delays()),
-                              ("powerlaw", power_law_delays())]:
-        for name, enc_name, k in [("steiner_k12", "steiner", 12),
-                                  ("haar_k12", "haar", 12),
-                                  ("uncoded_k16", "uncoded", 16),
-                                  ("uncoded_k12", "uncoded", 12),
-                                  ("replication_k12", "replication", 12)]:
-            enc = make_encoder(enc_name, p,
-                               beta=1.0 if enc_name == "uncoded" else 2.0)
-            enc = pad_rows(enc, m)
-            prob = make_lifted_problem(X, enc, m, val, gradfn)
-            masks, times = masks_from_delays(model, m, k, steps, seed=7)
-            import time
+    for delay_name in ("bimodal", "power_law"):
+        engine = ClusterEngine(make_delay_model(delay_name), m, seed=7)
+        for name, strategy, cfg in schemes:
             t0 = time.perf_counter()
-            v, tr = run_encoded_bcd(prob, masks, step_size=4.0)
-            us = (time.perf_counter() - t0) / steps * 1e6
+            res = wl.run(strategy, engine, preset=ps, data=data, **cfg)
+            us = (time.perf_counter() - t0) / ps.steps * 1e6
             emit(f"logistic_{delay_name}_{name}", us,
-                 f"final_train_err={tr[-1]:.4f};"
-                 f"sim_wallclock_s={times[-1]:.1f}")
-            results.append((delay_name, name, tr[-1], times[-1]))
-        # async baseline
-        ferr, telap = _async_bcd(X, labels, m, steps // 4,
-                                 model, 11, step_size=2.0)
-        emit(f"logistic_{delay_name}_async", 0.0,
-             f"final_train_err={ferr:.4f};sim_wallclock_s={telap:.1f}")
-        results.append((delay_name, "async", ferr, telap))
+                 f"final_train_loss={res.final_objective:.4f};"
+                 f"test_err={res.final_metric:.4f};"
+                 f"sim_wallclock_s={res.wallclock:.1f}")
+            results.append((delay_name, name, res.final_objective,
+                            res.final_metric, res.wallclock))
     return results
 
 

@@ -1,112 +1,56 @@
 """Paper Tables 2-3: matrix factorization (MovieLens-protocol, synthetic).
 
-MovieLens-1M is not redistributable offline, so we generate a statistically
-matched stand-in (low-rank + bias + noise ratings, 1-5 clipped, ~5% density),
-keep the paper's 80/20 split and alternating-ridge solver, and run each
-alternating step as ONE joint ridge regression solved with distributed
-encoded L-BFGS over m workers (the paper's coded solver), under exp(10ms)
-worker delays.  Reports train/test RMSE per scheme and k, as in Tables 2-3.
+MovieLens-1M is not redistributable offline, so the ``mf`` workload
+generates a statistically matched stand-in (low-rank + bias + noise
+ratings, 1-5 clipped), keeps the 80/20 split, and runs alternating coded
+least squares: every ALS half-step is ONE joint ridge regression dispatched
+through the strategy registry and the ``ClusterEngine`` (exp worker delays,
+fresh realization per half-step).  This module only enumerates the paper's
+encoder x k scheme table and emits CSV; it also prints the exact-ALS
+reference RMSE from ``workloads.ground_truth``.
 """
 from __future__ import annotations
 
-import numpy as np
-import jax.numpy as jnp
+import time
 
-from repro.core import (make_encoder, pad_rows, make_encoded_problem,
-                        run_encoded_lbfgs, exponential_delays)
-from .common import emit, masks_from_delays
+from repro.workloads import get_workload
+from repro.workloads.ground_truth import als_reference
 
-
-def _synthetic_ratings(users=120, movies=90, rank=4, density=0.08, seed=0):
-    rng = np.random.default_rng(seed)
-    U = rng.standard_normal((users, rank)) * 0.5
-    V = rng.standard_normal((movies, rank)) * 0.5
-    bu = rng.standard_normal(users) * 0.3
-    bv = rng.standard_normal(movies) * 0.3
-    R = 3.0 + U @ V.T + bu[:, None] + bv[None, :] + \
-        0.3 * rng.standard_normal((users, movies))
-    R = np.clip(np.round(R * 2) / 2, 1.0, 5.0)
-    obs = rng.random((users, movies)) < density
-    train = obs & (rng.random((users, movies)) < 0.8)
-    test = obs & ~train
-    return R, train, test
+from .common import emit
 
 
-def _ridge_design(R, mask, fixed, p, reg_rows, side):
-    """Joint LS design for updating one side given the other: rows =
-    observed ratings, block features per row entity."""
-    users, movies = R.shape
-    n_ent = users if side == "u" else movies
-    rows, cols, vals, targ = [], [], [], []
-    idx = np.argwhere(mask)
-    for r, (i, j) in enumerate(idx):
-        ent = i if side == "u" else j
-        other = fixed[j] if side == "u" else fixed[i]
-        feat = np.concatenate([other, [1.0]])
-        for c, v in enumerate(feat):
-            rows.append(r)
-            cols.append(ent * (p + 1) + c)
-            vals.append(v)
-        targ.append(R[i, j])
-    A = np.zeros((len(idx), n_ent * (p + 1)), np.float32)
-    A[rows, cols] = vals
-    return A, np.asarray(targ, np.float32)
+def run(preset: str = "bench"):
+    wl = get_workload("mf")
+    ps = wl.preset(preset)
+    data = wl.build(ps)
+    m = ps.m
 
+    ref_train, ref_test = als_reference(data.R, data.train, data.test,
+                                        rank=ps.dims["rank"], lam=ps.lam,
+                                        epochs=ps.dims["epochs"])
+    emit("mf_exact_als_reference", 0.0,
+         f"train_rmse={ref_train:.3f};test_rmse={ref_test:.3f}")
 
-def run(epochs: int = 2, p: int = 4, m: int = 8, lam: float = 0.3,
-        lbfgs_iters: int = 15):
-    R, train, test = _synthetic_ratings()
-    users, movies = R.shape
-    rng = np.random.default_rng(1)
-    schemes = [("uncoded", "uncoded", 2.0), ("replication", "replication",
-                                             2.0),
-               ("gaussian", "gaussian", 2.0), ("paley", "paley", 2.0),
-               ("hadamard", "hadamard", 2.0)]
+    schemes = [
+        ("uncoded", "uncoded", {}),
+        ("replication", "replication", {}),
+        ("gaussian", "coded-lbfgs", {"encoder": "gaussian"}),
+        ("paley", "coded-lbfgs", {"encoder": "paley"}),
+        ("hadamard", "coded-lbfgs", {"encoder": "hadamard"}),
+    ]
     results = []
     for k in [m // 4, m // 2]:
-        for name, enc_name, beta in schemes:
-            U = rng.standard_normal((users, p)).astype(np.float32) * 0.1
-            V = rng.standard_normal((movies, p)).astype(np.float32) * 0.1
-            Ub = np.concatenate([U, np.zeros((users, 1), np.float32)], 1)
-            Vb = np.concatenate([V, np.zeros((movies, 1), np.float32)], 1)
-            import time
+        for name, strategy, cfg in schemes:
             t0 = time.perf_counter()
-            for _ in range(epochs):
-                for side in ("u", "v"):
-                    fixed = Vb[:, :p + 1] if side == "u" else Ub[:, :p + 1]
-                    fixed_pb = np.concatenate(
-                        [fixed[:, :p], np.ones((fixed.shape[0], 1),
-                                               np.float32)], 1)
-                    A, t = _ridge_design(R - 3.0, train,
-                                         fixed[:, :p], p, lam, side)
-                    n = A.shape[0]
-                    pad = (-n) % m
-                    if pad:
-                        A = np.concatenate([A, np.zeros((pad, A.shape[1]),
-                                                        np.float32)])
-                        t = np.concatenate([t, np.zeros(pad, np.float32)])
-                    b = 1.0 if enc_name == "uncoded" else beta
-                    enc = pad_rows(make_encoder(enc_name, A.shape[0], beta=b, seed=3), m)
-                    prob = make_encoded_problem(A, t, enc, m, lam=lam)
-                    masks, _ = masks_from_delays(
-                        exponential_delays(), m, k, lbfgs_iters, seed=5)
-                    w0 = (Ub if side == "u" else Vb).reshape(-1)
-                    w, _ = run_encoded_lbfgs(prob, masks, memory=8,
-                                             w0=jnp.asarray(w0))
-                    w = np.asarray(w).reshape(-1, p + 1)
-                    if side == "u":
-                        Ub = w
-                    else:
-                        Vb = w
-            us = (time.perf_counter() - t0) * 1e6 / epochs
-
-            pred = 3.0 + Ub[:, :p] @ Vb[:, :p].T + Ub[:, p:p + 1] \
-                + Vb[:, p:p + 1].T
-            rmse = lambda msk: float(np.sqrt(
-                np.mean((pred[msk] - R[msk]) ** 2)))
+            res = wl.run(strategy, engine=None, preset=ps, data=data,
+                         k=k, **cfg)
+            us = (time.perf_counter() - t0) * 1e6 / ps.dims["epochs"]
+            train_rmse = res.meta["train_rmse"]
             emit(f"mf_{name}_k{k}", us,
-                 f"train_rmse={rmse(train):.3f};test_rmse={rmse(test):.3f}")
-            results.append((name, k, rmse(train), rmse(test)))
+                 f"train_rmse={train_rmse:.3f};"
+                 f"test_rmse={res.final_metric:.3f};"
+                 f"sim_wallclock_s={res.wallclock:.1f}")
+            results.append((name, k, train_rmse, res.final_metric))
     return results
 
 

@@ -1,65 +1,61 @@
 """Paper Fig 7: ridge regression with distributed encoded L-BFGS.
 
 Schemes: uncoded (k=m and k<m), replication, Hadamard(FWHT)-coded; bimodal
-delay distribution.  Reports iterations-to-tolerance, final suboptimality
-f/f* - 1, and SIMULATED wall-clock (k-th order statistic per iteration,
-same accounting as the paper's runtime plots).
+delay distribution plus the deterministic adversarial rotation.  Problem
+setup, ground truth and scoring come from the ``ridge`` workload
+(``repro.workloads``) — this module only enumerates the scheme table and
+emits CSV.  Reports iterations-to-tolerance, final suboptimality f/f* - 1,
+and SIMULATED wall-clock.
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import (make_encoder, make_encoded_problem,
-                        run_encoded_lbfgs, original_objective,
-                        bimodal_delays, adversarial_sets, active_mask)
-from repro.data import lsq_dataset
-from .common import emit, masks_from_delays
+from repro.runtime import AdversarialRotation
+from repro.workloads import get_workload
+
+from .common import emit
 
 
-def run(n: int = 1024, p: int = 512, m: int = 32, steps: int = 40,
-        lam: float = 0.05):
-    X, y, _ = lsq_dataset(n, p, noise=1.0, seed=0)
-    w_star = np.linalg.solve(X.T @ X / n + lam * np.eye(p), X.T @ y / n)
+def run(preset: str = "bench"):
+    wl = get_workload("ridge")
+    ps = wl.preset(preset)
+    data = wl.build(ps)
+    engine = wl.default_engine(ps)
+    m = ps.m
 
+    k_mid, k_lo = (3 * m) // 4, m // 2 - m // 8
     schemes = [
-        ("uncoded_k32", "uncoded", 32, "bimodal"),
-        ("uncoded_k24", "uncoded", 24, "bimodal"),
-        ("replication_k24", "replication", 24, "bimodal"),
-        ("hadamard_k24", "hadamard", 24, "bimodal"),
-        ("hadamard_k12", "hadamard", 12, "bimodal"),
+        (f"uncoded_k{m}", "uncoded", {"k": m}),
+        (f"uncoded_k{k_mid}", "uncoded", {"k": k_mid}),
+        (f"replication_k{k_mid}", "replication", {"k": k_mid}),
+        (f"hadamard_k{k_mid}", "coded-lbfgs", {"k": k_mid}),
+        (f"hadamard_k{k_lo}", "coded-lbfgs", {"k": k_lo}),
         # worst-case erasure schedule — the paper's deterministic guarantee
-        ("uncoded_k24_adv", "uncoded", 24, "adversarial"),
-        ("replication_k24_adv", "replication", 24, "adversarial"),
-        ("hadamard_k24_adv", "hadamard", 24, "adversarial"),
+        (f"uncoded_k{k_mid}_adv", "uncoded",
+         {"policy": AdversarialRotation(k_mid)}),
+        (f"replication_k{k_mid}_adv", "replication",
+         {"policy": AdversarialRotation(k_mid)}),
+        (f"hadamard_k{k_mid}_adv", "coded-lbfgs",
+         {"policy": AdversarialRotation(k_mid)}),
     ]
     results = []
-    for name, enc_name, k, sched in schemes:
-        enc = make_encoder(enc_name, n, beta=1.0 if enc_name == "uncoded"
-                           else 2.0, seed=1)
-        prob = make_encoded_problem(X, y, enc, m, lam=lam)
-        f_star = float(original_objective(prob, jnp.asarray(w_star), h="l2"))
-        if sched == "adversarial":
-            masks = np.stack([active_mask(m, A) for A in
-                              adversarial_sets(m, k, steps)])
-            times = np.cumsum(np.full(steps, 20.0))  # stragglers always slow
-        else:
-            masks, times = masks_from_delays(bimodal_delays(), m, k, steps,
-                                             seed=2)
-        import time
+    for name, strategy, cfg in schemes:
         t0 = time.perf_counter()
-        _, tr = run_encoded_lbfgs(prob, masks, memory=10)
-        us = (time.perf_counter() - t0) / steps * 1e6
-        subopt = tr[-1] / f_star - 1.0
-        # iterations to reach 1% suboptimality
-        hit = np.argmax(tr <= 1.01 * f_star) if (tr <= 1.01 * f_star).any() \
-            else -1
+        res = wl.run(strategy, engine, preset=ps, data=data, **cfg)
+        us = (time.perf_counter() - t0) / ps.steps * 1e6
+        f_star = data.f_star
+        subopt = res.final_objective / f_star - 1.0
+        hits = np.nonzero(np.asarray(res.objective) <= 1.01 * f_star)[0]
+        hit = int(hits[0]) if hits.size else -1
         derived = (f"subopt={subopt:.2e};iters_to_1pct={hit};"
-                   f"sim_wallclock_s={times[min(hit, steps - 1)]:.1f}" if
-                   hit >= 0 else f"subopt={subopt:.2e};iters_to_1pct=inf")
+                   f"sim_wallclock_s={res.times[hit]:.1f}" if hit >= 0
+                   else f"subopt={subopt:.2e};iters_to_1pct=inf")
         emit(f"ridge_{name}", us, derived)
         results.append((name, subopt, hit,
-                        times[min(hit, steps - 1)] if hit >= 0 else np.inf))
+                        res.times[hit] if hit >= 0 else np.inf))
     return results
 
 

@@ -1,2 +1,3 @@
 from .pipeline import (TokenStream, CodedBatcher, lsq_dataset, lsq_rows,
+                       logreg_dataset, logreg_rows, mf_ratings_dataset,
                        stream_worker_blocks)

@@ -14,6 +14,13 @@ consume ``run_matrix`` / the emitted files instead of hand-rolling loops.
 encoders ('fast-hadamard', 'block-diagonal') — those encode without ever
 materializing S, so the same matrix runs at data sizes where the dense
 ``(beta*n, n)`` construction cannot be allocated.
+
+``--workload`` swaps the default synthetic quadratic for a paper-§5 workload
+from ``repro.workloads`` (ridge / lasso / logistic / mf): the workload owns
+dataset synthesis, lowering, and its paper metric, and every cell's record
+carries ``metric_name`` / ``final_metric``.  Cells whose strategy cannot run
+a given workload (or objective) become skip-with-reason records instead of
+silently vanishing from the matrix.
 """
 from __future__ import annotations
 
@@ -35,19 +42,43 @@ __all__ = ["run_matrix", "write_json", "write_csv", "main"]
 
 
 def run_matrix(strategies: Sequence[str], delays: Sequence[str], *,
-               n: int = 512, p: int = 128, m: int = 16, k: int | None = None,
-               steps: int = 200, lam: float = 0.05, h: str = "l2",
+               n: int = 512, p: int = 128, m: int | None = None,
+               k: int | None = None,
+               steps: int | None = None, lam: float = 0.05, h: str = "l2",
                encoder: str = "hadamard", policy: str = "fastest-k",
                compute_time: float = 0.05, seed: int = 0,
                staleness_bound: int | None = None,
                async_updates: int | None = None,
                deadline: float = 1.0, policy_beta: float = 2.0,
-               noise: float = 0.5) -> list[dict]:
+               noise: float = 0.5, workload: str | None = None,
+               preset: str = "smoke") -> list[dict]:
     """Run the full comparison matrix; returns one record per cell.
 
-    A strategy incompatible with the objective (e.g. ``async`` with h='l1')
-    is skipped with a warning record instead of aborting the matrix.
+    Every record carries ``metric_name`` / ``final_metric`` (the plain
+    quadratic path scores the objective itself; a ``workload`` cell scores
+    its paper metric).  A strategy incompatible with the objective or
+    workload becomes a skip-with-reason record instead of aborting the
+    matrix — downstream tables can show WHY the cell is empty.
     """
+    if workload is not None:
+        ignored = [flag for flag, val, default in [
+            ("--policy", policy, "fastest-k"), ("--h", h, "l2"),
+            ("--lam", lam, 0.05), ("--n", n, 512), ("--p", p, 128),
+            ("--noise", noise, 0.5), ("--deadline", deadline, 1.0),
+            ("--policy-beta", policy_beta, 2.0),
+            ("--staleness-bound", staleness_bound, None),
+            ("--async-updates", async_updates, None)] if val != default]
+        if ignored:
+            print(f"# --workload: {', '.join(ignored)} ignored — the "
+                  f"workload preset owns problem shape, objective and "
+                  f"policy; use repro.workloads.Workload.run(**cfg) for "
+                  f"fine-grained control")
+        return _run_workload_matrix(workload, strategies, delays,
+                                    preset=preset, m=m, k=k, steps=steps,
+                                    encoder=encoder, seed=seed,
+                                    compute_time=compute_time)
+    m = 16 if m is None else m          # workload presets own m/steps when
+    steps = 200 if steps is None else steps  # --workload is given
     spec = ProblemSpec.synthetic(n, p, noise=noise, lam=lam, h=h, seed=seed)
     k = k if k is not None else max(1, (3 * m) // 4)
     records = []
@@ -67,16 +98,39 @@ def run_matrix(strategies: Sequence[str], delays: Sequence[str], *,
                 cfg["policy"] = _make_policy(policy, m, k,
                                              deadline=deadline,
                                              beta=policy_beta)
+            base = {"strategy": strat_name, "delay": delay_name, "n": n,
+                    "p": p, "m": m, "k": k, "seed": seed}
             try:
                 result: RunResult = get_strategy(strat_name).run(
                     spec, engine, steps=steps, **cfg)
             except ValueError as e:
                 print(f"# skipping {strat_name} x {delay_name}: {e}")
+                records.append({**base, "skipped": str(e),
+                                "metric_name": "objective"})
                 continue
             rec = result.to_record()
-            rec.update(delay=delay_name, n=n, p=p, m=m, k=k, seed=seed)
+            rec.update(base, metric_name="objective",
+                       final_metric=rec["final_objective"])
             records.append(rec)
     return records
+
+
+def _run_workload_matrix(workload: str, strategies: Sequence[str],
+                         delays: Sequence[str], *, preset: str,
+                         m: int | None, k: int | None, steps: int | None,
+                         encoder: str, seed: int,
+                         compute_time: float) -> list[dict]:
+    """The ``--workload`` axis: delegate to the workloads experiment runner
+    (ONE cell loop for both harnesses), constrained to a single workload."""
+    from repro.workloads.runner import run_workload_matrix
+    cfg: dict = {"encoder": encoder}
+    if k is not None:
+        cfg["k"] = k
+    if steps is not None:
+        cfg["steps"] = steps
+    return run_workload_matrix([workload], strategies, preset=preset,
+                               delays=list(delays), seed=seed, m=m,
+                               compute_time=compute_time, **cfg)
 
 
 def _make_policy(name: str, m: int, k: int, *, deadline: float = 1.0,
@@ -97,14 +151,28 @@ def write_json(records: list[dict], path: str) -> None:
 
 
 def write_csv(records: list[dict], path: str) -> None:
-    """Long-format trace table: one row per recorded (strategy, delay, step)."""
+    """Long-format trace table: one row per recorded (strategy, delay, step).
+
+    Every row repeats the cell's ``metric_name`` / ``final_metric`` so the
+    CSV is self-describing; a skipped cell contributes a single row whose
+    ``skipped`` column carries the reason.
+    """
     with open(path, "w", newline="") as f:
         w = csv.writer(f)
-        w.writerow(["strategy", "delay", "step", "time_s", "objective"])
+        w.writerow(["workload", "strategy", "delay", "step", "time_s",
+                    "objective", "metric_name", "final_metric", "skipped"])
         for rec in records:
+            wl = rec.get("workload", "")
+            metric_name = rec.get("metric_name", "objective")
+            if "skipped" in rec:
+                w.writerow([wl, rec["strategy"], rec["delay"], "", "", "",
+                            metric_name, "", rec["skipped"]])
+                continue
+            final_metric = f"{rec['final_metric']:.8e}"
             for i, (t, obj) in enumerate(zip(rec["times"], rec["objective"])):
-                w.writerow([rec["strategy"], rec["delay"], i,
-                            f"{t:.6f}", f"{obj:.8e}"])
+                w.writerow([wl, rec["strategy"], rec["delay"], i,
+                            f"{t:.6f}", f"{obj:.8e}", metric_name,
+                            final_metric, ""])
 
 
 def main(argv: Sequence[str] | None = None) -> list[dict]:
@@ -117,9 +185,12 @@ def main(argv: Sequence[str] | None = None) -> list[dict]:
                     help="comma list of delay models")
     ap.add_argument("--n", type=int, default=512)
     ap.add_argument("--p", type=int, default=128)
-    ap.add_argument("--m", type=int, default=16, help="workers")
+    ap.add_argument("--m", type=int, default=None,
+                    help="workers (default 16; --workload presets own this)")
     ap.add_argument("--k", type=int, default=None, help="fastest-k (default 3m/4)")
-    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--steps", type=int, default=None,
+                    help="iterations (default 200; --workload presets own "
+                         "this)")
     ap.add_argument("--lam", type=float, default=0.05)
     ap.add_argument("--h", default="l2", choices=["l2", "l1", "none"])
     ap.add_argument("--encoder", default="hadamard",
@@ -136,6 +207,14 @@ def main(argv: Sequence[str] | None = None) -> list[dict]:
                     help="overlap beta for --policy adaptive-k")
     ap.add_argument("--staleness-bound", type=int, default=None)
     ap.add_argument("--async-updates", type=int, default=None)
+    ap.add_argument("--workload", default=None,
+                    help="run a paper-§5 workload from repro.workloads "
+                         "(ridge/lasso/logistic/mf) instead of the default "
+                         "synthetic quadratic; cells score the workload's "
+                         "paper metric")
+    ap.add_argument("--preset", default="smoke",
+                    choices=["smoke", "bench", "paper"],
+                    help="workload scale preset (with --workload)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="runs/compare")
     ap.add_argument("--formats", default="json,csv")
@@ -149,7 +228,8 @@ def main(argv: Sequence[str] | None = None) -> list[dict]:
         compute_time=args.compute_time, seed=args.seed,
         staleness_bound=args.staleness_bound,
         async_updates=args.async_updates,
-        deadline=args.deadline, policy_beta=args.policy_beta)
+        deadline=args.deadline, policy_beta=args.policy_beta,
+        workload=args.workload, preset=args.preset)
 
     os.makedirs(args.out, exist_ok=True)
     formats = {f.strip() for f in args.formats.split(",")}
@@ -159,11 +239,16 @@ def main(argv: Sequence[str] | None = None) -> list[dict]:
         write_csv(records, os.path.join(args.out, "compare.csv"))
 
     print(f"{'strategy':14s} {'delay':12s} {'final f':>12s} "
-          f"{'wallclock_s':>12s} {'records':>8s}")
+          f"{'metric':>22s} {'wallclock_s':>12s} {'records':>8s}")
     for rec in records:
+        if "skipped" in rec:
+            print(f"{rec['strategy']:14s} {rec['delay']:12s} "
+                  f"{'skipped:':>12s} {rec['skipped']}")
+            continue
+        metric = f"{rec['metric_name']}={rec['final_metric']:.5g}"
         print(f"{rec['strategy']:14s} {rec['delay']:12s} "
-              f"{rec['final_objective']:12.5f} {rec['wallclock_s']:12.2f} "
-              f"{len(rec['objective']):8d}")
+              f"{rec['final_objective']:12.5f} {metric:>22s} "
+              f"{rec['wallclock_s']:12.2f} {len(rec['objective']):8d}")
     print(f"wrote {sorted(formats)} to {args.out}/")
     return records
 

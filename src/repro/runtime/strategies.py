@@ -28,8 +28,16 @@ from .runners import scan_async, scan_bcd, scan_gd, scan_prox
 
 __all__ = [
     "ProblemSpec", "RunResult", "Strategy", "register_strategy",
-    "get_strategy", "available_strategies",
+    "get_strategy", "available_strategies", "json_safe_meta",
 ]
+
+
+def json_safe_meta(meta: dict) -> dict:
+    """JSON-serializable view of a meta dict: primitives pass through,
+    everything else (arrays, policies, ...) is stringified.  Shared by every
+    ``to_record`` (RunResult here, WorkloadRunResult in repro.workloads)."""
+    return {k: (v if isinstance(v, (int, float, str, bool)) else str(v))
+            for k, v in meta.items()}
 
 
 # ---------------------------------------------------------------------------
@@ -82,6 +90,10 @@ class RunResult:
     objective: np.ndarray   # (T,) objective at each record point
     w: np.ndarray | None = None
     meta: dict = dataclasses.field(default_factory=dict)
+    # The realized engine Schedule (or AsyncTrace) behind this run, so callers
+    # (repro.workloads) can inspect per-iteration active sets.  Host-side
+    # object; deliberately NOT serialized by ``to_record``.
+    schedule: Any = None
 
     @property
     def final_objective(self) -> float:
@@ -99,8 +111,7 @@ class RunResult:
             "objective": [float(v) for v in self.objective],
             "final_objective": self.final_objective,
             "wallclock_s": self.wallclock,
-            "meta": {k: (v if isinstance(v, (int, float, str, bool))
-                         else str(v)) for k, v in self.meta.items()},
+            "meta": json_safe_meta(self.meta),
         }
 
 
@@ -202,7 +213,8 @@ class _SyncGradientStrategy(Strategy):
             w=np.asarray(w),
             meta={"encoder": enc.name, "beta": enc.beta,
                   "policy": type(policy).__name__, "step_size": step_size,
-                  "mean_active": float(sched.masks.sum(1).mean())})
+                  "mean_active": float(sched.masks.sum(1).mean())},
+            schedule=sched)
 
 
 @register_strategy("coded-gd")
@@ -245,13 +257,17 @@ class CodedLBFGS(_SyncGradientStrategy):
         policy = self._policy(engine, cfg)
         enc, prob = self._problem(spec, engine, cfg)
         memory = cfg.pop("memory", 10)
+        w0 = cfg.pop("w0", None)
+        if w0 is not None:
+            w0 = jnp.asarray(w0, jnp.float32)
         sched = engine.sample_schedule(steps, policy)
-        w, tr = run_encoded_lbfgs(prob, sched.masks, memory=memory)
+        w, tr = run_encoded_lbfgs(prob, sched.masks, memory=memory, w0=w0)
         return RunResult(
             strategy=self.name, times=sched.times, objective=np.asarray(tr),
             w=np.asarray(w),
             meta={"encoder": enc.name, "beta": enc.beta, "memory": memory,
-                  "policy": type(policy).__name__})
+                  "policy": type(policy).__name__},
+            schedule=sched)
 
 
 @register_strategy("coded-bcd")
@@ -282,7 +298,8 @@ class CodedBCD(_SyncGradientStrategy):
             objective=np.asarray(tr)[1:], w=np.asarray(v),
             meta={"encoder": enc.name, "beta": enc.beta,
                   "objective": "phi(Xw) (unregularized, exact-optimum family)",
-                  "step_size": step_size})
+                  "step_size": step_size},
+            schedule=sched)
 
 
 # ---------------------------------------------------------------------------
@@ -321,4 +338,5 @@ class AsyncSGD(Strategy):
                   "dropped": trace.dropped,
                   "mean_staleness": float(trace.staleness.mean()),
                   "max_staleness": int(trace.staleness.max()),
-                  "step_size": step_size})
+                  "step_size": step_size},
+            schedule=trace)

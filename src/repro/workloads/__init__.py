@@ -1,0 +1,35 @@
+"""repro.workloads — the paper-§5 workload zoo (DESIGN.md §8).
+
+The layer between problem definitions and the execution engine: each
+workload (ridge, LASSO, logistic, matrix factorization) knows how to build
+its dataset at ``smoke``/``bench``/``paper`` presets, lower itself to the
+runtime's strategy layer, and score itself with its paper metric against a
+ground-truth reference.
+
+    from repro.workloads import get_workload
+    result = get_workload("ridge").run("coded", preset="smoke")
+
+CLI:  PYTHONPATH=src python -m repro.workloads.run \\
+          --workload mf --preset smoke \\
+          --strategies coded-lbfgs,replication,uncoded
+"""
+from .base import (Preset, UnsupportedStrategy, Workload, WorkloadRunResult,
+                   available_workloads, get_workload, register_workload)
+from . import ground_truth
+# Importing the workload modules registers them.
+from . import ridge, lasso, logistic, matrix_factorization  # noqa: F401
+
+__all__ = [
+    "Preset", "UnsupportedStrategy", "Workload", "WorkloadRunResult",
+    "available_workloads", "get_workload", "register_workload",
+    "ground_truth", "run_workload_matrix",
+]
+
+
+def __getattr__(name):
+    # Lazy: importing .runner eagerly would shadow `python -m
+    # repro.workloads.run` (runpy warns about double import).
+    if name == "run_workload_matrix":
+        from .runner import run_workload_matrix
+        return run_workload_matrix
+    raise AttributeError(name)

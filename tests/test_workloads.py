@@ -1,0 +1,226 @@
+"""repro.workloads: registry round-trip, ground-truth solvers, the four
+paper-§5 workloads end-to-end (MF ALS monotonicity, LASSO support F1,
+logistic-BCD vs host Newton), data generators, and the CLI."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import constant_delays
+from repro.data import (logreg_dataset, logreg_rows, lsq_dataset,
+                        mf_ratings_dataset)
+from repro.runtime import ClusterEngine
+from repro.workloads import (UnsupportedStrategy, Workload,
+                             available_workloads, get_workload,
+                             ground_truth as gt)
+
+
+def _full_participation_engine(m: int) -> ClusterEngine:
+    return ClusterEngine(constant_delays(0.1), m, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_registry_round_trip():
+    names = available_workloads()
+    assert names == sorted(["ridge", "lasso", "logistic", "mf"])
+    for name in names:
+        wl = get_workload(name)
+        assert isinstance(wl, Workload)
+        assert wl.name == name
+        assert wl.metric_name != "?"
+        assert {"smoke", "bench", "paper"} <= set(wl.presets)
+        # the 'coded' alias resolves to a workload-specific coded scheme
+        assert wl.resolve_strategy("coded") == wl.canonical_coded
+        assert wl.supports(wl.canonical_coded) is None
+
+
+def test_registry_unknown_raises():
+    with pytest.raises(KeyError, match="unknown workload"):
+        get_workload("nope")
+
+
+def test_unsupported_strategy_carries_reason():
+    with pytest.raises(UnsupportedStrategy, match="l1"):
+        get_workload("ridge").run("coded-prox", preset="smoke")
+
+
+def test_paper_presets_match_published_dims():
+    # the 'paper' preset is configs.paper_native verbatim
+    ridge = get_workload("ridge")
+    assert ridge.presets["paper"].dims["n"] == ridge.paper_config.n
+    assert ridge.presets["paper"].dims["p"] == ridge.paper_config.p
+    assert ridge.presets["paper"].m == ridge.paper_config.m
+
+
+# ---------------------------------------------------------------------------
+# Ground-truth solvers
+# ---------------------------------------------------------------------------
+
+def test_ridge_ground_truth_is_stationary():
+    X, y, _ = lsq_dataset(128, 32, noise=0.5, seed=0)
+    w = gt.ridge_solution(X, y, 0.05)
+    grad = X.T @ (X @ w - y) / 128 + 0.05 * w
+    assert np.abs(grad).max() < 1e-8
+
+
+def test_lasso_fista_beats_planted_signal_objective():
+    X, y, w_true = lsq_dataset(256, 64, noise=0.3, sparse=8, seed=0)
+    w = gt.lasso_fista(X, y, 0.05)
+    assert gt.lasso_objective(X, y, 0.05, w) <= \
+        gt.lasso_objective(X, y, 0.05, w_true) + 1e-9
+    assert gt.support_f1(w_true, w_true) == pytest.approx(1.0)
+
+
+def test_logistic_newton_is_stationary():
+    X, labels, _ = logreg_dataset(256, 32, noise=0.3, seed=0)
+    w = gt.logistic_newton(X, labels)
+    z = X @ w
+    s = 1.0 / (1.0 + np.exp(labels * z))
+    grad = -(X.T @ (labels * s)) / X.shape[0]
+    assert np.abs(grad).max() < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Data generators (satellite): chunk-deterministic conventions
+# ---------------------------------------------------------------------------
+
+def test_logreg_rows_chunk_deterministic():
+    X, labels, w = logreg_dataset(600, 24, seed=3)
+    Xs, ls, ws = logreg_rows(100, 300, 24, seed=3)
+    np.testing.assert_allclose(Xs, X[100:300])
+    np.testing.assert_allclose(ls, labels[100:300])
+    np.testing.assert_allclose(ws, w)
+    assert set(np.unique(labels)) <= {-1.0, 1.0}
+    rownorms = np.linalg.norm(X, axis=1)
+    np.testing.assert_allclose(rownorms[rownorms > 1e-6], 1.0, atol=1e-9)
+
+
+def test_mf_ratings_prefix_stable_and_split_disjoint():
+    R1, tr1, te1 = mf_ratings_dataset(40, 30, rank=3, density=0.3, seed=5)
+    R2, tr2, te2 = mf_ratings_dataset(64, 30, rank=3, density=0.3, seed=5)
+    np.testing.assert_allclose(R2[:40], R1)
+    np.testing.assert_array_equal(tr2[:40], tr1)
+    assert not (tr1 & te1).any()
+    assert R1.min() >= 1.0 and R1.max() <= 5.0
+
+
+# ---------------------------------------------------------------------------
+# Workloads end-to-end (smoke scale)
+# ---------------------------------------------------------------------------
+
+def test_ridge_gap_shrinks_and_traces_align():
+    wl = get_workload("ridge")
+    res = wl.run("coded", _full_participation_engine(8), preset="smoke",
+                 k=8)
+    assert res.metric_name == "subopt_gap"
+    assert len(res.times) == len(res.objective) == len(res.metric)
+    assert res.metric[-1] < 1e-2 * res.metric[0]
+    assert (res.metric >= 0).all()
+
+
+def test_lasso_support_recovery_f1_at_smoke_scale():
+    wl = get_workload("lasso")
+    res = wl.run("coded", preset="smoke")  # native engine, k < m
+    assert res.metric_name == "support_f1"
+    assert res.final_metric >= 0.85
+    # F1 recorded at chunk boundaries, with matching time stamps
+    assert len(res.metric_times) == len(res.metric) > 1
+    assert res.metric_times[-1] == pytest.approx(res.times[-1])
+
+
+def test_logistic_bcd_approaches_host_newton():
+    """Full participation: encoded BCD converges to the SAME optimum family
+    as the (sklearn-free) host Newton solve of the unregularized loss."""
+    wl = get_workload("logistic")
+    data = wl.build("smoke")
+    res = wl.run("coded", _full_participation_engine(8), preset="smoke",
+                 data=data, k=8, steps=600)
+    f_newton = gt.logistic_objective(
+        data.X_train, data.y_train,
+        gt.logistic_newton(data.X_train, data.y_train))
+    assert res.final_objective >= f_newton - 1e-6   # Newton is the optimum
+    assert res.final_objective <= f_newton + 0.03   # ...and BCD approaches it
+    assert res.final_metric < 0.45                  # held-out error beats coin
+    # the objective is monotone under full participation (exact lifting)
+    obj = np.asarray(res.objective)
+    assert (np.diff(obj) <= 1e-6).all()
+
+
+def test_mf_als_objective_monotone_under_full_participation():
+    wl = get_workload("mf")
+    res = wl.run("uncoded", _full_participation_engine(8), preset="smoke",
+                 k=8)
+    obj = np.asarray(res.objective)
+    assert len(obj) == 2 * wl.presets["smoke"].dims["epochs"]
+    assert (np.diff(obj) <= 1e-8).all(), f"ALS objective not monotone: {obj}"
+    # every half-step routed through the engine: per-step active sets logged
+    half_steps = res.extras["half_steps"]
+    assert len(half_steps) == len(obj)
+    for hs in half_steps:
+        assert len(hs["active_sets"]) == wl.presets["smoke"].steps
+        assert all(len(a) == 8 for a in hs["active_sets"])  # k = m = 8
+
+
+def test_mf_coded_matches_exact_als_reference():
+    wl = get_workload("mf")
+    data = wl.build("smoke")
+    ref_train, ref_test = gt.als_reference(
+        data.R, data.train, data.test, rank=wl.presets["smoke"].dims["rank"],
+        lam=wl.presets["smoke"].lam,
+        epochs=wl.presets["smoke"].dims["epochs"])
+    res = wl.run("coded", preset="smoke", data=data)
+    assert abs(res.final_metric - ref_test) < 0.1
+
+
+# ---------------------------------------------------------------------------
+# CLI + compare integration (satellites)
+# ---------------------------------------------------------------------------
+
+def test_workloads_cli_smoke(tmp_path):
+    from repro.workloads.runner import main
+    out = str(tmp_path / "wl")
+    records = main(["--workload", "ridge", "--preset", "smoke",
+                    "--strategies", "coded,uncoded,coded-prox,coded-lbgfs",
+                    "--steps", "8", "--out", out])
+    ran = [r for r in records if "skipped" not in r]
+    skipped = [r for r in records if "skipped" in r]
+    assert {r["strategy"] for r in ran} == {"coded-lbfgs", "uncoded"}
+    # incompatible AND typo'd strategies become skip-with-reason cells
+    assert len(skipped) == 2
+    reasons = {r["strategy"]: r["skipped"] for r in skipped}
+    assert "l1" in reasons["coded-prox"]
+    assert "unknown strategy" in reasons["coded-lbgfs"]
+    with open(os.path.join(out, "workloads.json")) as f:
+        on_disk = json.load(f)
+    assert len(on_disk) == 4
+    for rec in on_disk:
+        if "skipped" in rec:
+            continue
+        assert rec["metric_name"] == "subopt_gap"
+        assert len(rec["metric"]) == len(rec["metric_times"]) > 0
+        assert isinstance(rec["final_metric"], float)
+    assert os.path.exists(os.path.join(out, "summary.csv"))
+
+
+def test_compare_workload_axis_records_metric_and_skips():
+    from repro.runtime.compare import run_matrix
+    recs = run_matrix(["coded", "uncoded", "async"], ["exponential"],
+                      workload="lasso", preset="smoke", steps=24)
+    by_strategy = {r["strategy"]: r for r in recs}
+    assert "skipped" in by_strategy["async"]
+    assert by_strategy["async"]["metric_name"] == "support_f1"
+    ran = by_strategy["coded-prox"]
+    assert ran["metric_name"] == "support_f1"
+    assert 0.0 <= ran["final_metric"] <= 1.0
+
+
+def test_compare_plain_cells_carry_metric_fields():
+    from repro.runtime.compare import run_matrix
+    recs = run_matrix(["uncoded"], ["exponential"], n=64, p=16, m=4, k=3,
+                      steps=5)
+    assert recs[0]["metric_name"] == "objective"
+    assert recs[0]["final_metric"] == recs[0]["final_objective"]
