@@ -1,0 +1,133 @@
+"""Batched-trial execution: sequential per-realization loop vs one vmapped
+program (DESIGN.md §9).
+
+The paper's §5 figures average many delay realizations per cell; the
+historical harness ran them one at a time — R separate ``scan_gd`` dispatches
+with a host sync each.  ``batched_scan_gd`` runs the whole (R, T, m) schedule
+stack inside one jit.  This benchmark measures that speedup on the ridge
+smoke preset at R ∈ {1, 4, 16, 64}, verifies the per-realization traces
+match sequential execution to 1e-5, and writes ``BENCH_trials.json`` at the
+repo root so future PRs have a trajectory to compare against.
+
+    PYTHONPATH=src python -m benchmarks.bench_trials            # full
+    PYTHONPATH=src python -m benchmarks.bench_trials --smoke    # CI preset
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hadamard_encoder, make_encoded_problem, pad_rows
+from repro.runtime import ClusterEngine, FastestK, make_delay_model
+from repro.runtime.runners import batched_scan_gd, scan_gd
+from repro.workloads import get_workload
+
+from .common import emit, time_us
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(_ROOT, "BENCH_trials.json")
+
+
+def _setup(preset: str = "smoke"):
+    """The ridge workload preset, lowered once: encoded problem + engine."""
+    wl = get_workload("ridge")
+    ps = wl.preset(preset)
+    data = wl.build(ps)
+    spec = data.spec
+    enc = pad_rows(hadamard_encoder(spec.n, 2.0), ps.m)
+    prob = make_encoded_problem(spec.X, spec.y, enc, ps.m, lam=spec.lam)
+    engine = ClusterEngine(make_delay_model(ps.delay), ps.m, seed=0)
+    step_size = 1.0 / (1.3 * spec.lipschitz() + spec.lam)
+    return ps, prob, engine, step_size
+
+
+def _sequential(prob, masks, step_size, p):
+    """The pre-batching harness: one fused scan per realization, host sync
+    between realizations."""
+    outs = []
+    for r in range(masks.shape[0]):
+        w, tr = scan_gd(prob, masks[r], step_size, jnp.zeros(p))
+        outs.append((np.asarray(w), np.asarray(tr)))
+    return outs
+
+
+def _batched(prob, masks, step_size, p, eval_every=1):
+    R = masks.shape[0]
+    # fresh (R, p) start stack per call — the runner donates the carry
+    return batched_scan_gd(prob, masks, step_size, jnp.zeros((R, p)),
+                           eval_every=eval_every)
+
+
+def run(trials=(1, 4, 16, 64), iters: int = 3, preset: str = "smoke",
+        out_json: str = DEFAULT_OUT) -> list[dict]:
+    ps, prob, engine, step_size = _setup(preset)
+    p = prob.SX.shape[-1]
+    results = []
+    for R in trials:
+        batch = engine.sample_schedules(ps.steps, FastestK(ps.k), R)
+        masks = jnp.asarray(batch.masks)
+
+        seq = _sequential(prob, masks, step_size, p)
+        w_b, tr_b = _batched(prob, masks, step_size, p)
+        err = max(float(np.abs(np.asarray(tr_b)[r] - seq[r][1]).max())
+                  for r in range(R))
+        match = err < 1e-5
+
+        us_seq = time_us(_sequential, prob, masks, step_size, p, iters=iters)
+        us_bat = time_us(_batched, prob, masks, step_size, p, iters=iters)
+        us_strided = time_us(_batched, prob, masks, step_size, p,
+                             eval_every=min(ps.steps, 10), iters=iters)
+        speedup = us_seq / max(us_bat, 1e-9)
+        emit(f"trials_sequential_R{R}", us_seq, f"steps={ps.steps}")
+        emit(f"trials_batched_R{R}", us_bat,
+             f"speedup={speedup:.1f}x;traces_match={match}")
+        emit(f"trials_batched_eval10_R{R}", us_strided,
+             f"speedup={us_seq / max(us_strided, 1e-9):.1f}x")
+        results.append({
+            "R": R, "preset": ps.name, "steps": ps.steps, "m": ps.m,
+            "k": ps.k, "n": int(prob.n), "p": int(p),
+            "us_sequential": us_seq, "us_batched": us_bat,
+            "us_batched_eval_every_10": us_strided,
+            "speedup": speedup, "traces_match": bool(match),
+            "max_abs_trace_err": err,
+        })
+    os.makedirs(os.path.dirname(os.path.abspath(out_json)), exist_ok=True)
+    with open(out_json, "w") as f:
+        json.dump({"bench": "batched-trials (ridge smoke, scan_gd)",
+                   "backend": _backend(), "results": results}, f, indent=1)
+    print(f"# wrote {out_json}")
+    return results
+
+
+def _backend() -> str:
+    import jax
+    return jax.default_backend()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="benchmarks.bench_trials")
+    ap.add_argument("--trials", default="1,4,16,64",
+                    help="comma list of realization counts R")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--preset", default="smoke",
+                    choices=["smoke", "bench", "paper"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI preset: R in {1, 4}, 2 timing iters")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        trials, iters = (1, 4), 2
+    else:
+        trials = tuple(int(r) for r in args.trials.split(",") if r.strip())
+        iters = args.iters
+    print("name,us_per_call,derived")
+    return run(trials=trials, iters=iters, preset=args.preset,
+               out_json=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,7 @@ import time
 def main() -> None:
     from . import (bench_spectrum, bench_ridge, bench_lasso, bench_logistic,
                    bench_matrix_factorization, bench_kernels, bench_coded_lm,
-                   bench_runtime, bench_encoding)
+                   bench_runtime, bench_encoding, bench_trials)
     print("name,us_per_call,derived")
     suites = [
         ("spectrum (paper Figs 5-6)", bench_spectrum.run),
@@ -26,6 +26,7 @@ def main() -> None:
         ("coded-DP LM trainer (beyond-paper, DESIGN §4)", bench_coded_lm.run),
         ("kernels", bench_kernels.run),
         ("runtime scan-fused vs legacy loops", bench_runtime.run),
+        ("batched trials vs sequential loop (DESIGN §9)", bench_trials.run),
     ]
     t_all = time.time()
     for title, fn in suites:

@@ -99,9 +99,20 @@ def encoded_gradients(prob: EncodedProblem, w: jax.Array) -> jax.Array:
 
 
 def _masked_mean(g: jax.Array, mask: jax.Array) -> jax.Array:
-    """(1/eta) sum_{i in A} g_i with eta = k/m — the paper's 1/(2 n eta) scaling."""
+    """(1/eta) sum_{i in A} g_i with eta = k/m — the paper's 1/(2 n eta) scaling.
+
+    On TPU the weighted reduction runs through the fused Pallas combine
+    kernel (``kernels/coded_reduce.py``): the (m, p) weighted intermediate
+    never round-trips HBM.  Elsewhere the dense einsum is faster than the
+    interpreted kernel, so it stays the fallback.
+    """
     k = jnp.maximum(mask.sum(), 1.0)
-    return jnp.einsum("m,mp->p", mask, g) * (g.shape[0] / k)
+    c = mask * (g.shape[0] / k)
+    from repro.kernels.ops import on_tpu
+    if on_tpu():
+        from repro.kernels.coded_reduce import coded_combine_call
+        return coded_combine_call(g, c)
+    return jnp.einsum("m,mp->p", c, g)
 
 
 def masked_gradient(prob: EncodedProblem, w: jax.Array,

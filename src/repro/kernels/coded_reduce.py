@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .fwht import default_interpret
+
 __all__ = ["coded_combine_call"]
 
 
@@ -27,19 +29,29 @@ def _combine_body(g_ref, c_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block"))
 def coded_combine_call(g: jax.Array, c: jax.Array, *, block: int = 2048,
-                       interpret: bool = True) -> jax.Array:
-    """g: (m, P) worker gradients; c: (m,) decode weights -> (P,)."""
+                       interpret: bool | None = None) -> jax.Array:
+    """g: (m, P) worker gradients; c: (m,) decode weights -> (P,).
+
+    interpret=None (default) picks the mode from the backend: compiled
+    Mosaic on TPU, interpreted elsewhere (the ``fwht.py`` policy).  A P that
+    is not a block multiple is zero-padded to one — the pad lanes combine to
+    zeros that are sliced away, so any gradient width is accepted.
+    """
+    if interpret is None:
+        interpret = default_interpret()
     m, P = g.shape
     bp = min(block, P)
-    if P % bp:
-        raise ValueError(f"P={P} not divisible by block {bp}")
+    pad = (-P) % bp
+    if pad:
+        g = jnp.pad(g, ((0, 0), (0, pad)))
+    padded = P + pad
     out = pl.pallas_call(
         _combine_body,
-        grid=(P // bp,),
+        grid=(padded // bp,),
         in_specs=[pl.BlockSpec((m, bp), lambda i: (0, i)),
                   pl.BlockSpec((m, 1), lambda i: (0, 0))],
         out_specs=pl.BlockSpec((1, bp), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((1, P), g.dtype),
+        out_shape=jax.ShapeDtypeStruct((1, padded), g.dtype),
         interpret=interpret,
     )(g, c[:, None])
-    return out[0]
+    return out[0, :P]

@@ -78,13 +78,9 @@ def hadamard_encode(X: jax.Array, cols: np.ndarray, signs: np.ndarray,
 
 
 def coded_combine(g: jax.Array, c: jax.Array) -> jax.Array:
-    """Fused coded gradient combine: sum_i c_i g_i for (m, P) grads."""
-    interpret = not on_tpu()
-    m, P = g.shape
-    # pad P to the block multiple
-    block = 2048 if P >= 2048 else P
-    pad = (-P) % block
-    if pad:
-        g = jnp.pad(g, ((0, 0), (0, pad)))
-    out = coded_combine_call(g, c, block=block, interpret=interpret)
-    return out[:P]
+    """Fused coded gradient combine: sum_i c_i g_i for (m, P) grads.
+
+    The kernel itself pads P to a block multiple and resolves interpret
+    mode from the backend, so this is a plain alias kept for API stability.
+    """
+    return coded_combine_call(g, c)

@@ -12,20 +12,24 @@ Four parts:
                      wall-clock-vs-objective traces (JSON/CSV).
 """
 from .engine import (DELAY_MODELS, POLICIES, ActiveSetPolicy, AdaptiveK,
-                     AdversarialRotation, AsyncTrace, ClusterEngine, Deadline,
-                     FastestK, IterationEvent, Schedule, make_delay_model,
-                     make_policy)
-from .runners import scan_async, scan_bcd, scan_gd, scan_prox
-from .strategies import (ProblemSpec, RunResult, Strategy,
+                     AdversarialRotation, AsyncBatch, AsyncTrace,
+                     ClusterEngine, Deadline, FastestK, IterationEvent,
+                     Schedule, ScheduleBatch, make_delay_model, make_policy)
+from .runners import (batched_scan_async, batched_scan_bcd, batched_scan_gd,
+                      batched_scan_prox, scan_async, scan_bcd, scan_gd,
+                      scan_prox)
+from .strategies import (ProblemSpec, RunResult, Strategy, TrialsResult,
                          available_strategies, get_strategy,
-                         register_strategy)
+                         register_strategy, summary_stats)
 __all__ = [
     "DELAY_MODELS", "POLICIES", "ActiveSetPolicy", "AdaptiveK",
-    "AdversarialRotation", "AsyncTrace", "ClusterEngine", "Deadline",
-    "FastestK", "IterationEvent", "Schedule", "make_delay_model",
-    "make_policy", "scan_async", "scan_bcd", "scan_gd", "scan_prox",
-    "ProblemSpec", "RunResult", "Strategy", "available_strategies",
-    "get_strategy", "register_strategy", "run_matrix",
+    "AdversarialRotation", "AsyncBatch", "AsyncTrace", "ClusterEngine",
+    "Deadline", "FastestK", "IterationEvent", "Schedule", "ScheduleBatch",
+    "make_delay_model", "make_policy", "scan_async", "scan_bcd", "scan_gd",
+    "scan_prox", "batched_scan_async", "batched_scan_bcd", "batched_scan_gd",
+    "batched_scan_prox", "ProblemSpec", "RunResult", "Strategy",
+    "TrialsResult", "available_strategies", "get_strategy",
+    "register_strategy", "summary_stats", "run_matrix",
 ]
 
 

@@ -15,6 +15,12 @@ encoders ('fast-hadamard', 'block-diagonal') — those encode without ever
 materializing S, so the same matrix runs at data sizes where the dense
 ``(beta*n, n)`` construction cannot be allocated.
 
+``--trials R`` adds the paper's Monte-Carlo axis: every cell runs R delay
+realizations as ONE compiled program (``Strategy.run_batched``, DESIGN.md
+§9) and its record carries the (R, T) trace stack plus mean/p50/p95
+wall-clock and final-objective summaries.  ``--eval-every s`` strides the
+objective evaluation inside the compiled loop.
+
 ``--workload`` swaps the default synthetic quadratic for a paper-§5 workload
 from ``repro.workloads`` (ridge / lasso / logistic / mf): the workload owns
 dataset synthesis, lowering, and its paper metric, and every cell's record
@@ -36,7 +42,7 @@ from repro.core.encoding import available_encoders
 
 from .engine import ClusterEngine, make_delay_model, make_policy
 from .strategies import ProblemSpec, RunResult, available_strategies, \
-    get_strategy
+    check_trials, get_strategy
 
 __all__ = ["run_matrix", "write_json", "write_csv", "main"]
 
@@ -51,7 +57,8 @@ def run_matrix(strategies: Sequence[str], delays: Sequence[str], *,
                async_updates: int | None = None,
                deadline: float = 1.0, policy_beta: float = 2.0,
                noise: float = 0.5, workload: str | None = None,
-               preset: str = "smoke") -> list[dict]:
+               preset: str = "smoke", trials: int = 1,
+               eval_every: int = 1) -> list[dict]:
     """Run the full comparison matrix; returns one record per cell.
 
     Every record carries ``metric_name`` / ``final_metric`` (the plain
@@ -59,6 +66,12 @@ def run_matrix(strategies: Sequence[str], delays: Sequence[str], *,
     its paper metric).  A strategy incompatible with the objective or
     workload becomes a skip-with-reason record instead of aborting the
     matrix — downstream tables can show WHY the cell is empty.
+
+    ``trials=R`` runs R delay realizations per cell as ONE compiled program
+    (``Strategy.run_batched``); the record then carries the (R, T) trace
+    stack plus mean/p50/p95 wall-clock and final-objective summaries, and
+    scalar ``final_metric`` / ``wallclock_s`` become across-trial means.
+    ``eval_every=s`` records the objective every s steps (s | steps).
     """
     if workload is not None:
         ignored = [flag for flag, val, default in [
@@ -76,9 +89,14 @@ def run_matrix(strategies: Sequence[str], delays: Sequence[str], *,
         return _run_workload_matrix(workload, strategies, delays,
                                     preset=preset, m=m, k=k, steps=steps,
                                     encoder=encoder, seed=seed,
-                                    compute_time=compute_time)
+                                    compute_time=compute_time, trials=trials,
+                                    eval_every=eval_every)
     m = 16 if m is None else m          # workload presets own m/steps when
     steps = 200 if steps is None else steps  # --workload is given
+    # a bad trials/eval_every combination is a harness misconfiguration, not
+    # a per-cell incompatibility — fail the matrix up front instead of
+    # letting the skip-with-reason handler turn every cell into a skip
+    check_trials(steps, trials, eval_every)
     spec = ProblemSpec.synthetic(n, p, noise=noise, lam=lam, h=h, seed=seed)
     k = k if k is not None else max(1, (3 * m) // 4)
     records = []
@@ -101,8 +119,13 @@ def run_matrix(strategies: Sequence[str], delays: Sequence[str], *,
             base = {"strategy": strat_name, "delay": delay_name, "n": n,
                     "p": p, "m": m, "k": k, "seed": seed}
             try:
-                result: RunResult = get_strategy(strat_name).run(
-                    spec, engine, steps=steps, **cfg)
+                if trials > 1:
+                    result = get_strategy(strat_name).run_batched(
+                        spec, engine, steps=steps, trials=trials,
+                        eval_every=eval_every, **cfg)
+                else:
+                    result: RunResult = get_strategy(strat_name).run(
+                        spec, engine, steps=steps, **cfg)
             except ValueError as e:
                 print(f"# skipping {strat_name} x {delay_name}: {e}")
                 records.append({**base, "skipped": str(e),
@@ -118,8 +141,8 @@ def run_matrix(strategies: Sequence[str], delays: Sequence[str], *,
 def _run_workload_matrix(workload: str, strategies: Sequence[str],
                          delays: Sequence[str], *, preset: str,
                          m: int | None, k: int | None, steps: int | None,
-                         encoder: str, seed: int,
-                         compute_time: float) -> list[dict]:
+                         encoder: str, seed: int, compute_time: float,
+                         trials: int = 1, eval_every: int = 1) -> list[dict]:
     """The ``--workload`` axis: delegate to the workloads experiment runner
     (ONE cell loop for both harnesses), constrained to a single workload."""
     from repro.workloads.runner import run_workload_matrix
@@ -130,7 +153,8 @@ def _run_workload_matrix(workload: str, strategies: Sequence[str],
         cfg["steps"] = steps
     return run_workload_matrix([workload], strategies, preset=preset,
                                delays=list(delays), seed=seed, m=m,
-                               compute_time=compute_time, **cfg)
+                               compute_time=compute_time, trials=trials,
+                               eval_every=eval_every, **cfg)
 
 
 def _make_policy(name: str, m: int, k: int, *, deadline: float = 1.0,
@@ -150,8 +174,23 @@ def write_json(records: list[dict], path: str) -> None:
         json.dump(records, f, indent=1)
 
 
+def trace_rows(rec: dict):
+    """Yield (trial, step, time, objective) rows from a record's traces —
+    single-trial records carry flat (T,) lists (trial 0), batched records a
+    (R, T) nesting."""
+    times, obj = rec["times"], rec["objective"]
+    if times and isinstance(times[0], (list, tuple)):
+        for r, (ts, os_) in enumerate(zip(times, obj)):
+            for i, (t, o) in enumerate(zip(ts, os_)):
+                yield r, i, t, o
+    else:
+        for i, (t, o) in enumerate(zip(times, obj)):
+            yield 0, i, t, o
+
+
 def write_csv(records: list[dict], path: str) -> None:
-    """Long-format trace table: one row per recorded (strategy, delay, step).
+    """Long-format trace table: one row per recorded (strategy, delay,
+    trial, step).
 
     Every row repeats the cell's ``metric_name`` / ``final_metric`` so the
     CSV is self-describing; a skipped cell contributes a single row whose
@@ -159,18 +198,19 @@ def write_csv(records: list[dict], path: str) -> None:
     """
     with open(path, "w", newline="") as f:
         w = csv.writer(f)
-        w.writerow(["workload", "strategy", "delay", "step", "time_s",
-                    "objective", "metric_name", "final_metric", "skipped"])
+        w.writerow(["workload", "strategy", "delay", "trial", "step",
+                    "time_s", "objective", "metric_name", "final_metric",
+                    "skipped"])
         for rec in records:
             wl = rec.get("workload", "")
             metric_name = rec.get("metric_name", "objective")
             if "skipped" in rec:
                 w.writerow([wl, rec["strategy"], rec["delay"], "", "", "",
-                            metric_name, "", rec["skipped"]])
+                            "", metric_name, "", rec["skipped"]])
                 continue
             final_metric = f"{rec['final_metric']:.8e}"
-            for i, (t, obj) in enumerate(zip(rec["times"], rec["objective"])):
-                w.writerow([wl, rec["strategy"], rec["delay"], i,
+            for r, i, t, obj in trace_rows(rec):
+                w.writerow([wl, rec["strategy"], rec["delay"], r, i,
                             f"{t:.6f}", f"{obj:.8e}", metric_name,
                             final_metric, ""])
 
@@ -215,6 +255,13 @@ def main(argv: Sequence[str] | None = None) -> list[dict]:
     ap.add_argument("--preset", default="smoke",
                     choices=["smoke", "bench", "paper"],
                     help="workload scale preset (with --workload)")
+    ap.add_argument("--trials", type=int, default=1,
+                    help="delay realizations per cell; > 1 runs the whole "
+                         "stack as one compiled program (records carry "
+                         "per-realization traces + mean/p50/p95 summaries)")
+    ap.add_argument("--eval-every", type=int, default=1,
+                    help="record the objective every s steps in batched "
+                         "runs (s must divide the schedule length)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="runs/compare")
     ap.add_argument("--formats", default="json,csv")
@@ -229,7 +276,8 @@ def main(argv: Sequence[str] | None = None) -> list[dict]:
         staleness_bound=args.staleness_bound,
         async_updates=args.async_updates,
         deadline=args.deadline, policy_beta=args.policy_beta,
-        workload=args.workload, preset=args.preset)
+        workload=args.workload, preset=args.preset, trials=args.trials,
+        eval_every=args.eval_every)
 
     os.makedirs(args.out, exist_ok=True)
     formats = {f.strip() for f in args.formats.split(",")}
@@ -239,16 +287,20 @@ def main(argv: Sequence[str] | None = None) -> list[dict]:
         write_csv(records, os.path.join(args.out, "compare.csv"))
 
     print(f"{'strategy':14s} {'delay':12s} {'final f':>12s} "
-          f"{'metric':>22s} {'wallclock_s':>12s} {'records':>8s}")
+          f"{'metric':>22s} {'wallclock_s':>12s} {'trialsxT':>9s}")
     for rec in records:
         if "skipped" in rec:
             print(f"{rec['strategy']:14s} {rec['delay']:12s} "
                   f"{'skipped:':>12s} {rec['skipped']}")
             continue
         metric = f"{rec['metric_name']}={rec['final_metric']:.5g}"
+        obj = rec["objective"]
+        shape = (f"{len(obj)}x{len(obj[0])}"
+                 if obj and isinstance(obj[0], (list, tuple))
+                 else f"1x{len(obj)}")
         print(f"{rec['strategy']:14s} {rec['delay']:12s} "
               f"{rec['final_objective']:12.5f} {metric:>22s} "
-              f"{rec['wallclock_s']:12.2f} {len(rec['objective']):8d}")
+              f"{rec['wallclock_s']:12.2f} {shape:>9s}")
     print(f"wrote {sorted(formats)} to {args.out}/")
     return records
 

@@ -32,7 +32,8 @@ from repro.core.straggler import (DelayModel, adaptive_k, bimodal_delays,
 __all__ = [
     "DELAY_MODELS", "make_delay_model", "ActiveSetPolicy", "FastestK",
     "AdaptiveK", "Deadline", "AdversarialRotation", "POLICIES", "make_policy",
-    "IterationEvent", "Schedule", "AsyncTrace", "ClusterEngine",
+    "IterationEvent", "Schedule", "AsyncTrace", "ScheduleBatch", "AsyncBatch",
+    "ClusterEngine",
 ]
 
 
@@ -177,6 +178,53 @@ class AsyncTrace:
         return self.workers.shape[0]
 
 
+@dataclasses.dataclass(frozen=True)
+class ScheduleBatch:
+    """R independent synchronous realizations, stacked along a leading trial
+    axis — the input of the batched (``jax.vmap``) runners.  Realization r is
+    exactly ``engine.trial(r).sample_schedule(...)``, so batched and
+    sequential execution see identical delay draws."""
+    m: int
+    masks: np.ndarray         # (R, T, m) float32 0/1 erasure masks
+    times: np.ndarray         # (R, T) elapsed seconds at each commit
+    schedules: tuple          # tuple[Schedule, ...], one per realization
+
+    @property
+    def trials(self) -> int:
+        return self.masks.shape[0]
+
+    @property
+    def steps(self) -> int:
+        return self.masks.shape[1]
+
+    def realization(self, r: int) -> Schedule:
+        return self.schedules[r]
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncBatch:
+    """R independent asynchronous realizations (same trial-seed convention
+    as ``ScheduleBatch``).  Every realization applies the same number of
+    updates U, so the event streams stack into rectangular (R, U) arrays."""
+    m: int
+    workers: np.ndarray        # (R, U) int32
+    staleness: np.ndarray      # (R, U) int32
+    times: np.ndarray          # (R, U) float64 elapsed seconds at apply
+    dropped: np.ndarray        # (R,) gradients discarded per realization
+    traces: tuple              # tuple[AsyncTrace, ...], one per realization
+
+    @property
+    def trials(self) -> int:
+        return self.workers.shape[0]
+
+    @property
+    def updates(self) -> int:
+        return self.workers.shape[1]
+
+    def realization(self, r: int) -> AsyncTrace:
+        return self.traces[r]
+
+
 # ---------------------------------------------------------------------------
 # Engine
 # ---------------------------------------------------------------------------
@@ -200,17 +248,42 @@ class ClusterEngine:
         self.master_overhead = float(master_overhead)
         self.seed = int(seed)
 
+    # -- trial seeding ---------------------------------------------------
+
+    def _trial_seed(self, realization: int) -> int:
+        """Seed of delay realization ``realization``, derived from the ONE
+        engine seed.  Realization 0 is the engine's own seed (so single-trial
+        runs are unchanged); realization r > 0 is the (seed, r) child stream
+        — stable no matter how many trials are drawn alongside it."""
+        if realization == 0:
+            return self.seed
+        return int(np.random.SeedSequence(
+            [self.seed, realization]).generate_state(1)[0])
+
+    def trial(self, realization: int) -> "ClusterEngine":
+        """Delay realization ``realization`` as its own engine: identical
+        cluster, trial-r seed.  ``engine.trial(r).sample_schedule(...)``
+        equals realization r of ``engine.sample_schedules(...)`` — the
+        bridge harnesses use to run non-batchable cells (host-loop solvers,
+        chunked workloads) trial by trial on the same realizations."""
+        if realization == 0:
+            return self
+        return ClusterEngine(self.delay_model, self.m,
+                             compute_time=self.compute_time,
+                             master_overhead=self.master_overhead,
+                             seed=self._trial_seed(realization))
+
     # -- synchronous (barrier) mode -------------------------------------
 
-    def sample_schedule(self, steps: int,
-                        policy: ActiveSetPolicy) -> Schedule:
+    def sample_schedule(self, steps: int, policy: ActiveSetPolicy, *,
+                        realization: int = 0) -> Schedule:
         """Realize ``steps`` BSP iterations under ``policy``.
 
         Iteration t starts at the previous commit; worker i's gradient
         arrives ``compute_time + delay_i`` later; the master commits at the
         latest arrival over A_t plus ``master_overhead``.
         """
-        rng = np.random.default_rng(self.seed)
+        rng = np.random.default_rng(self._trial_seed(realization))
         policy.reset()
         now = 0.0
         prev_active: np.ndarray | None = None
@@ -230,9 +303,31 @@ class ClusterEngine:
             prev_active = active
         return Schedule(self.m, masks, times, tuple(events))
 
+    def sample_schedules(self, steps: int, policy: ActiveSetPolicy,
+                         trials: int) -> ScheduleBatch:
+        """Realize ``trials`` independent schedules as one (R, T, m) stack.
+
+        The realization axis is the Monte-Carlo axis of the paper's §5
+        protocol (sample-path guarantees hold for EVERY delay realization,
+        so figures average many).  Each realization replays the exact rng
+        stream of ``sample_schedule`` under its trial seed — batched runs
+        are bit-identical to looping ``engine.trial(r)`` — and stateful
+        policies are reset at every realization boundary.
+        """
+        if trials < 1:
+            raise ValueError("trials must be >= 1")
+        scheds = tuple(self.sample_schedule(steps, policy, realization=r)
+                       for r in range(trials))
+        return ScheduleBatch(
+            m=self.m,
+            masks=np.stack([s.masks for s in scheds]),
+            times=np.stack([s.times for s in scheds]),
+            schedules=scheds)
+
     # -- asynchronous (per-arrival) mode --------------------------------
 
-    def sample_async(self, updates: int, staleness_bound: int) -> AsyncTrace:
+    def sample_async(self, updates: int, staleness_bound: int, *,
+                     realization: int = 0) -> AsyncTrace:
         """Realize an async run until ``updates`` gradients are APPLIED.
 
         Every worker loops {read w, compute for compute_time + delay, send};
@@ -245,7 +340,7 @@ class ClusterEngine:
         """
         if staleness_bound < 0:
             raise ValueError("staleness_bound must be >= 0")
-        rng = np.random.default_rng(self.seed)
+        rng = np.random.default_rng(self._trial_seed(realization))
         read_version = np.zeros(self.m, dtype=np.int64)  # per-worker timestamp
         version = 0
         heap: list[tuple[float, int]] = []
@@ -278,3 +373,22 @@ class ClusterEngine:
             times=np.asarray(times),
             dropped=dropped,
         )
+
+    def sample_asyncs(self, updates: int, staleness_bound: int,
+                      trials: int) -> AsyncBatch:
+        """Realize ``trials`` independent async event streams, stacked
+        (R, U) — every realization runs until the same ``updates`` gradients
+        are applied, so the streams are rectangular.  Same trial-seed
+        convention as ``sample_schedules``."""
+        if trials < 1:
+            raise ValueError("trials must be >= 1")
+        traces = tuple(self.sample_async(updates, staleness_bound,
+                                         realization=r)
+                       for r in range(trials))
+        return AsyncBatch(
+            m=self.m,
+            workers=np.stack([t.workers for t in traces]),
+            staleness=np.stack([t.staleness for t in traces]),
+            times=np.stack([t.times for t in traces]),
+            dropped=np.asarray([t.dropped for t in traces]),
+            traces=traces)

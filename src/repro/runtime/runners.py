@@ -8,11 +8,21 @@ schedule and returns the full trace.  ``core.data_parallel`` /
 ``core.model_parallel`` ``run_*`` entry points are now thin wrappers over
 these (identical math, identical op order, so traces agree to float rounding).
 
-``scan_async`` is the new asynchronous stale-gradient SGD runner: it consumes
+``scan_async`` is the asynchronous stale-gradient SGD runner: it consumes
 a per-arrival event stream from ``runtime.engine`` and maintains a circular
 buffer of the last ``staleness_bound + 1`` iterates, indexing it with each
 update's staleness — bounded-staleness semantics with per-worker parameter
 timestamps, fully fused on device.
+
+``batched_scan_*`` are the Monte-Carlo variants (DESIGN.md §9): ``jax.vmap``
+over a leading realization axis inside ONE jit, so "R delay realizations of
+one cell" is a single compiled program — every per-step op carries the whole
+realization batch instead of dispatching R separate scans.  The carry buffer
+is donated (callers hand a fresh (R, ...) stack per call) and ``eval_every``
+strides the O(n·p) ``original_objective`` pass: with ``eval_every=s`` the
+trace holds f after steps s, 2s, ..., i.e. every s-th entry of the dense
+trace.  The jit cache is the cell-level executable cache: every cell of a
+comparison matrix with the same (R, T, m, p) shape reuses one executable.
 """
 from __future__ import annotations
 
@@ -26,8 +36,76 @@ from repro.core.data_parallel import (EncodedProblem, masked_gradient,
                                       original_objective, prox_l1)
 from repro.core.model_parallel import LiftedProblem
 
-__all__ = ["scan_gd", "scan_prox", "scan_bcd", "scan_async"]
+__all__ = [
+    "scan_gd", "scan_prox", "scan_bcd", "scan_async",
+    "batched_scan_gd", "batched_scan_prox", "batched_scan_bcd",
+    "batched_scan_async",
+]
 
+
+# ---------------------------------------------------------------------------
+# Shared per-step math (single source of truth for fused + batched runners)
+# ---------------------------------------------------------------------------
+
+def _gd_step(prob: EncodedProblem, w, mask, step_size, h: str):
+    g = masked_gradient(prob, w, mask)
+    if h == "l2":
+        g = g + prob.lam * w
+    return w - step_size * g
+
+
+def _prox_step(prob: EncodedProblem, w, mask, step_size):
+    g = masked_gradient(prob, w, mask)
+    return prox_l1(w - step_size * g, step_size * prob.lam)
+
+
+def _async_step(prob: EncodedProblem, carry, ev, step_size, buffer_size: int,
+                h: str):
+    """One applied update of stale-gradient SGD on the ring-buffer carry."""
+    m = prob.SX.shape[0]
+    w, buf, head = carry
+    i, tau = ev
+    w_stale = buf[jnp.mod(head - tau, buffer_size)]
+    SXi = prob.SX[i]                       # (r, p) block of worker i
+    r = SXi @ w_stale - prob.Sy[i]
+    g = (SXi.T @ r) * (m / (prob.n * prob.beta))
+    if h == "l2":
+        g = g + prob.lam * w_stale
+    w_new = w - step_size * g
+    head_new = head + 1
+    buf = buf.at[jnp.mod(head_new, buffer_size)].set(w_new)
+    return (w_new, buf, head_new)
+
+
+def _strided_scan(step, evalf, carry0, xs, eval_every: int):
+    """Scan ``step`` over ``xs`` emitting ``evalf(carry)`` every
+    ``eval_every`` steps (a nested scan, so the stride stays on device).
+    With ``eval_every=1`` this is the plain fused scan; otherwise the trace
+    has length T // eval_every with trace[j] = evalf after step (j+1)*s.
+    """
+    length = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    if eval_every == 1:
+        def body(c, x):
+            c = step(c, x)
+            return c, evalf(c)
+        return lax.scan(body, carry0, xs)
+    if eval_every < 1 or length % eval_every:
+        raise ValueError(f"eval_every={eval_every} must be a positive "
+                         f"divisor of the {length}-step schedule")
+    blocks = jax.tree_util.tree_map(
+        lambda a: a.reshape((length // eval_every, eval_every) + a.shape[1:]),
+        xs)
+
+    def outer(c, xb):
+        c = lax.scan(lambda c2, x: (step(c2, x), None), c, xb)[0]
+        return c, evalf(c)
+
+    return lax.scan(outer, carry0, blocks)
+
+
+# ---------------------------------------------------------------------------
+# Single-realization fused runners
+# ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("h",))
 def scan_gd(prob: EncodedProblem, masks: jax.Array, step_size,
@@ -37,26 +115,18 @@ def scan_gd(prob: EncodedProblem, masks: jax.Array, step_size,
     Returns (w_T, trace) with trace[t] = f(w_{t+1}) on the original problem —
     the same convention as the legacy per-step loop.
     """
-    def body(w, mask):
-        g = masked_gradient(prob, w, mask)
-        if h == "l2":
-            g = g + prob.lam * w
-        w = w - step_size * g
-        return w, original_objective(prob, w, h=h)
-
-    return lax.scan(body, w0, masks)
+    return _strided_scan(lambda w, mask: _gd_step(prob, w, mask, step_size, h),
+                         lambda w: original_objective(prob, w, h=h),
+                         w0, masks, 1)
 
 
 @jax.jit
 def scan_prox(prob: EncodedProblem, masks: jax.Array, step_size,
               w0: jax.Array):
     """Encoded proximal gradient (ISTA, l1) over a mask schedule."""
-    def body(w, mask):
-        g = masked_gradient(prob, w, mask)
-        w = prox_l1(w - step_size * g, step_size * prob.lam)
-        return w, original_objective(prob, w, h="l1")
-
-    return lax.scan(body, w0, masks)
+    return _strided_scan(lambda w, mask: _prox_step(prob, w, mask, step_size),
+                         lambda w: original_objective(prob, w, h="l1"),
+                         w0, masks, 1)
 
 
 # LiftedProblem carries Python callables (phi), so the scan cannot be jitted
@@ -108,24 +178,105 @@ def scan_async(prob: EncodedProblem, workers: jax.Array, staleness: jax.Array,
     immediately.  The per-worker gradient is scaled by m so it is an unbiased
     estimate of the full gradient.
     """
-    m = prob.SX.shape[0]
-
-    def body(carry, ev):
-        w, buf, head = carry
-        i, tau = ev
-        w_stale = buf[jnp.mod(head - tau, buffer_size)]
-        SXi = prob.SX[i]                       # (r, p) block of worker i
-        r = SXi @ w_stale - prob.Sy[i]
-        g = (SXi.T @ r) * (m / (prob.n * prob.beta))
-        if h == "l2":
-            g = g + prob.lam * w_stale
-        w_new = w - step_size * g
-        head_new = head + 1
-        buf = buf.at[jnp.mod(head_new, buffer_size)].set(w_new)
-        return (w_new, buf, head_new), original_objective(prob, w_new, h=h)
-
     buf0 = jnp.tile(w0[None], (buffer_size, 1))
-    (w_final, _, _), trace = lax.scan(
-        body, (w0, buf0, jnp.int32(0)),
-        (workers.astype(jnp.int32), staleness.astype(jnp.int32)))
+    (w_final, _, _), trace = _strided_scan(
+        lambda c, ev: _async_step(prob, c, ev, step_size, buffer_size, h),
+        lambda c: original_objective(prob, c[0], h=h),
+        (w0, buf0, jnp.int32(0)),
+        (workers.astype(jnp.int32), staleness.astype(jnp.int32)), 1)
     return w_final, trace
+
+
+# ---------------------------------------------------------------------------
+# Batched-trial runners: vmap over the leading realization axis
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("h", "eval_every"), donate_argnums=(3,))
+def batched_scan_gd(prob: EncodedProblem, masks: jax.Array, step_size,
+                    w0: jax.Array, h: str = "l2", eval_every: int = 1):
+    """R realizations of encoded GD in one compiled program.
+
+    masks: (R, T, m) stacked schedules; w0: (R, p) per-realization starts
+    (donated — hand a fresh stack per call).  Returns (w (R, p),
+    trace (R, T // eval_every)) with trace[r, j] = f(w after step
+    (j+1)*eval_every) of realization r.
+    """
+    def one(masks_r, w0_r):
+        return _strided_scan(
+            lambda w, mask: _gd_step(prob, w, mask, step_size, h),
+            lambda w: original_objective(prob, w, h=h),
+            w0_r, masks_r, eval_every)
+
+    return jax.vmap(one)(masks, w0)
+
+
+@partial(jax.jit, static_argnames=("eval_every",), donate_argnums=(3,))
+def batched_scan_prox(prob: EncodedProblem, masks: jax.Array, step_size,
+                      w0: jax.Array, eval_every: int = 1):
+    """R realizations of encoded ISTA in one compiled program (see
+    ``batched_scan_gd`` for the axis/donation/eval_every conventions)."""
+    def one(masks_r, w0_r):
+        return _strided_scan(
+            lambda w, mask: _prox_step(prob, w, mask, step_size),
+            lambda w: original_objective(prob, w, h="l1"),
+            w0_r, masks_r, eval_every)
+
+    return jax.vmap(one)(masks, w0)
+
+
+@lru_cache(maxsize=8)
+def _bcd_batched_runner(phi_val, phi_grad):
+    @partial(jax.jit, static_argnames=("eval_every",), donate_argnums=(3,))
+    def run(XS, masks, step_size, v0, eval_every=1):
+        def step(v, mask):
+            z = jnp.einsum("mnb,mb->mn", XS, v).sum(axis=0)
+            d = -step_size * jnp.einsum("mnb,n->mb", XS, phi_grad(z))
+            return v + mask[:, None] * d
+
+        def evalf(v):
+            return phi_val(jnp.einsum("mnb,mb->n", XS, v))
+
+        def one(masks_r, v0_r):
+            return _strided_scan(step, evalf, v0_r, masks_r, eval_every)
+
+        return jax.vmap(one)(masks, v0)
+
+    return run
+
+
+def batched_scan_bcd(prob: LiftedProblem, masks: jax.Array, step_size,
+                     v0: jax.Array, eval_every: int = 1):
+    """R realizations of encoded BCD in one compiled program.
+
+    masks: (R, T, m); v0: (R, m, b) (donated).  Unlike ``scan_bcd``'s
+    legacy pre-commit trace, the batched trace is POST-commit:
+    trace[r, j] = phi(z after commit (j+1)*eval_every), i.e. with
+    eval_every=1 it equals ``scan_bcd``'s trace[1:] — the slice every
+    strategy reports anyway.
+    """
+    run = _bcd_batched_runner(prob.phi_val, prob.phi_grad)
+    return run(prob.XS, masks, jnp.asarray(step_size, prob.XS.dtype), v0,
+               eval_every=eval_every)
+
+
+@partial(jax.jit, static_argnames=("buffer_size", "h", "eval_every"),
+         donate_argnums=(4,))
+def batched_scan_async(prob: EncodedProblem, workers: jax.Array,
+                       staleness: jax.Array, step_size, w0: jax.Array,
+                       buffer_size: int, h: str = "l2", eval_every: int = 1):
+    """R realizations of async stale-gradient SGD in one compiled program.
+
+    workers/staleness: (R, U) stacked event streams; w0: (R, p) (donated).
+    Returns (w (R, p), trace (R, U // eval_every)).
+    """
+    def one(workers_r, staleness_r, w0_r):
+        buf0 = jnp.tile(w0_r[None], (buffer_size, 1))
+        (w_final, _, _), trace = _strided_scan(
+            lambda c, ev: _async_step(prob, c, ev, step_size, buffer_size, h),
+            lambda c: original_objective(prob, c[0], h=h),
+            (w0_r, buf0, jnp.int32(0)),
+            (workers_r.astype(jnp.int32), staleness_r.astype(jnp.int32)),
+            eval_every)
+        return w_final, trace
+
+    return jax.vmap(one)(workers, staleness, w0)

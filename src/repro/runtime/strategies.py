@@ -11,6 +11,7 @@ and become available to ``runtime.compare`` and the benchmarks for free.
 from __future__ import annotations
 
 import dataclasses
+from functools import lru_cache
 from typing import Any
 
 import jax.numpy as jnp
@@ -24,11 +25,14 @@ from repro.core.lbfgs import run_encoded_lbfgs
 from repro.core.model_parallel import make_lifted_problem, phi_quadratic
 
 from .engine import ActiveSetPolicy, AsyncTrace, ClusterEngine, FastestK
-from .runners import scan_async, scan_bcd, scan_gd, scan_prox
+from .runners import (batched_scan_async, batched_scan_bcd, batched_scan_gd,
+                      batched_scan_prox, scan_async, scan_bcd, scan_gd,
+                      scan_prox)
 
 __all__ = [
-    "ProblemSpec", "RunResult", "Strategy", "register_strategy",
-    "get_strategy", "available_strategies", "json_safe_meta",
+    "ProblemSpec", "RunResult", "TrialsResult", "Strategy",
+    "register_strategy", "get_strategy", "available_strategies",
+    "json_safe_meta", "summary_stats", "check_trials",
 ]
 
 
@@ -105,14 +109,103 @@ class RunResult:
 
     def to_record(self) -> dict:
         """JSON-serializable record (traces included, iterate omitted)."""
+        # np.asarray().tolist() converts the whole trace in C — the
+        # per-element float() loop was measurable at T=10k x R trials
         return {
             "strategy": self.strategy,
-            "times": [float(t) for t in self.times],
-            "objective": [float(v) for v in self.objective],
+            "times": np.asarray(self.times, dtype=float).tolist(),
+            "objective": np.asarray(self.objective, dtype=float).tolist(),
             "final_objective": self.final_objective,
             "wallclock_s": self.wallclock,
             "meta": json_safe_meta(self.meta),
         }
+
+
+def summary_stats(values) -> dict:
+    """mean/p50/p95 of a per-realization vector (the Monte-Carlo summary
+    attached to every batched record)."""
+    a = np.asarray(values, dtype=float)
+    return {"mean": float(a.mean()), "p50": float(np.percentile(a, 50)),
+            "p95": float(np.percentile(a, 95))}
+
+
+@dataclasses.dataclass
+class TrialsResult:
+    """R delay realizations of one (strategy, delay model) cell, executed as
+    a single compiled program (DESIGN.md §9).
+
+    ``times``/``objective`` carry the per-realization traces stacked along
+    the leading trial axis; ``summary()`` reduces them to the Monte-Carlo
+    view (mean/p50/p95 wall-clock and final objective) the paper's figures
+    are built from.
+    """
+    strategy: str
+    times: np.ndarray       # (R, T') elapsed simulated seconds per record
+    objective: np.ndarray   # (R, T') objective at each record point
+    w: np.ndarray | None = None     # (R, p) final iterates
+    meta: dict = dataclasses.field(default_factory=dict)
+    # The realized ScheduleBatch / AsyncBatch; host-side, NOT serialized.
+    schedules: Any = None
+
+    @property
+    def trials(self) -> int:
+        return self.times.shape[0]
+
+    @property
+    def final_objective(self) -> np.ndarray:
+        return np.asarray(self.objective)[:, -1]
+
+    @property
+    def wallclock(self) -> np.ndarray:
+        return np.asarray(self.times)[:, -1]
+
+    def realization(self, r: int) -> RunResult:
+        """Realization r as a plain single-trial RunResult."""
+        sched = None
+        if self.schedules is not None:
+            sched = self.schedules.realization(r)
+        return RunResult(
+            strategy=self.strategy, times=np.asarray(self.times)[r],
+            objective=np.asarray(self.objective)[r],
+            w=None if self.w is None else np.asarray(self.w)[r],
+            meta=dict(self.meta), schedule=sched)
+
+    def summary(self) -> dict:
+        return {"trials": int(self.trials),
+                "wallclock_s": summary_stats(self.wallclock),
+                "final_objective": summary_stats(self.final_objective)}
+
+    def to_record(self) -> dict:
+        """JSON record: per-realization traces + the Monte-Carlo summary.
+        Scalar ``final_objective`` / ``wallclock_s`` are the across-trial
+        means, so batched records drop into every single-trial consumer."""
+        return {
+            "strategy": self.strategy,
+            "trials": int(self.trials),
+            "times": np.asarray(self.times, dtype=float).tolist(),
+            "objective": np.asarray(self.objective, dtype=float).tolist(),
+            "final_objective": float(self.final_objective.mean()),
+            "wallclock_s": float(self.wallclock.mean()),
+            "summary": self.summary(),
+            "meta": json_safe_meta(self.meta),
+        }
+
+
+# The BCD runners (_bcd_runner / _bcd_batched_runner in runtime.runners)
+# cache compiled executables per (phi_val, phi_grad) CLOSURE IDENTITY, so
+# building fresh phi closures per cell would recompile every cell of a
+# matrix despite identical shapes.  Key the closures by the target data
+# instead: every cell solving the same y shares one closure pair and hence
+# one executable per shape.  Bounded like the runner caches (each entry
+# pins the y copy its closures capture).
+@lru_cache(maxsize=8)
+def _phi_quadratic_cached(y_bytes: bytes, dtype: str, shape: tuple):
+    return phi_quadratic(np.frombuffer(y_bytes, dtype=dtype).reshape(shape))
+
+
+def _phi_quadratic(y) -> tuple:
+    a = np.ascontiguousarray(np.asarray(y))
+    return _phi_quadratic_cached(a.tobytes(), str(a.dtype), a.shape)
 
 
 def _auto_step(spec: ProblemSpec) -> float:
@@ -163,13 +256,46 @@ def available_strategies() -> list[str]:
 
 
 class Strategy:
-    """One straggler-mitigation scheme. Subclasses implement ``run``."""
+    """One straggler-mitigation scheme. Subclasses implement ``run`` and
+    (for the Monte-Carlo protocol) ``run_batched``."""
 
     name = "?"
 
     def run(self, spec: ProblemSpec, engine: ClusterEngine, *,
             steps: int = 200, **cfg: Any) -> RunResult:
         raise NotImplementedError
+
+    def run_batched(self, spec: ProblemSpec, engine: ClusterEngine, *,
+                    steps: int = 200, trials: int = 1, eval_every: int = 1,
+                    **cfg: Any) -> TrialsResult:
+        """R delay realizations of this cell in one compiled program.
+
+        Realization r is bit-identical to ``run(spec, engine.trial(r), ...)``
+        up to vmap reduction rounding; ``eval_every=s`` records the
+        objective every s steps (s must divide the schedule length).
+        Fallback for schemes with host-side outer loops: build the problem
+        ONCE, then loop realizations sequentially.
+        """
+        check_trials(steps, trials, eval_every)
+        results = [self.run(spec, engine.trial(r), steps=steps, **dict(cfg))
+                   for r in range(trials)]
+        stride = slice(eval_every - 1, None, eval_every)
+        return TrialsResult(
+            strategy=self.name,
+            times=np.stack([np.asarray(r.times) for r in results])[:, stride],
+            objective=np.stack([np.asarray(r.objective)
+                                for r in results])[:, stride],
+            w=np.stack([np.asarray(r.w) for r in results]),
+            meta={**results[0].meta, "trials": trials,
+                  "eval_every": eval_every, "batched": False})
+
+
+def check_trials(steps: int, trials: int, eval_every: int) -> None:
+    if trials < 1:
+        raise ValueError("trials must be >= 1")
+    if eval_every < 1 or steps % eval_every:
+        raise ValueError(f"eval_every={eval_every} must be a positive "
+                         f"divisor of steps={steps}")
 
 
 # ---------------------------------------------------------------------------
@@ -216,6 +342,35 @@ class _SyncGradientStrategy(Strategy):
                   "mean_active": float(sched.masks.sum(1).mean())},
             schedule=sched)
 
+    def run_batched(self, spec, engine, *, steps=200, trials=1, eval_every=1,
+                    **cfg):
+        """R realizations as ONE vmapped scan: encode once, draw the
+        (R, T, m) schedule stack, run the batched runner."""
+        check_trials(steps, trials, eval_every)
+        policy = self._policy(engine, cfg)
+        enc, prob = self._problem(spec, engine, cfg)
+        step_size = cfg.pop("step_size", None) or _auto_step(spec)
+        w0 = jnp.asarray(cfg.pop("w0", np.zeros(spec.p)), jnp.float32)
+        w0 = jnp.tile(w0[None], (trials, 1))       # donated by the runner
+        batch = engine.sample_schedules(steps, policy, trials)
+        masks = jnp.asarray(batch.masks)
+        if spec.h == "l1":
+            w, tr = batched_scan_prox(prob, masks, step_size, w0,
+                                      eval_every=eval_every)
+        else:
+            w, tr = batched_scan_gd(prob, masks, step_size, w0, h=spec.h,
+                                    eval_every=eval_every)
+        return TrialsResult(
+            strategy=self.name,
+            times=batch.times[:, eval_every - 1::eval_every],
+            objective=np.asarray(tr), w=np.asarray(w),
+            meta={"encoder": enc.name, "beta": enc.beta,
+                  "policy": type(policy).__name__, "step_size": step_size,
+                  "trials": trials, "eval_every": eval_every,
+                  "batched": True,
+                  "mean_active": float(batch.masks.sum(-1).mean())},
+            schedules=batch)
+
 
 @register_strategy("coded-gd")
 class CodedGD(_SyncGradientStrategy):
@@ -230,6 +385,13 @@ class CodedProx(_SyncGradientStrategy):
         if spec.h != "l1":
             raise ValueError("coded-prox requires an l1 ProblemSpec")
         return super().run(spec, engine, steps=steps, **cfg)
+
+    def run_batched(self, spec, engine, *, steps=200, trials=1, eval_every=1,
+                    **cfg):
+        if spec.h != "l1":
+            raise ValueError("coded-prox requires an l1 ProblemSpec")
+        return super().run_batched(spec, engine, steps=steps, trials=trials,
+                                   eval_every=eval_every, **cfg)
 
 
 @register_strategy("uncoded")
@@ -269,6 +431,36 @@ class CodedLBFGS(_SyncGradientStrategy):
                   "policy": type(policy).__name__},
             schedule=sched)
 
+    def run_batched(self, spec, engine, *, steps=200, trials=1, eval_every=1,
+                    **cfg):
+        """The two-loop L-BFGS memory is host state, so realizations run
+        sequentially — but the encode and the schedule stack are built once,
+        and the trace is strided like the fused runners."""
+        if spec.h != "l2":
+            raise ValueError("coded-lbfgs requires the ridge objective")
+        check_trials(steps, trials, eval_every)
+        policy = self._policy(engine, cfg)
+        enc, prob = self._problem(spec, engine, cfg)
+        memory = cfg.pop("memory", 10)
+        w0 = cfg.pop("w0", None)
+        if w0 is not None:
+            w0 = jnp.asarray(w0, jnp.float32)
+        batch = engine.sample_schedules(steps, policy, trials)
+        ws, trs = [], []
+        for r in range(trials):
+            w, tr = run_encoded_lbfgs(prob, batch.masks[r], memory=memory,
+                                      w0=w0)
+            ws.append(np.asarray(w))
+            trs.append(np.asarray(tr))
+        stride = slice(eval_every - 1, None, eval_every)
+        return TrialsResult(
+            strategy=self.name, times=batch.times[:, stride],
+            objective=np.stack(trs)[:, stride], w=np.stack(ws),
+            meta={"encoder": enc.name, "beta": enc.beta, "memory": memory,
+                  "policy": type(policy).__name__, "trials": trials,
+                  "eval_every": eval_every, "batched": False},
+            schedules=batch)
+
 
 @register_strategy("coded-bcd")
 class CodedBCD(_SyncGradientStrategy):
@@ -284,7 +476,7 @@ class CodedBCD(_SyncGradientStrategy):
         enc = _resolve_encoder(cfg.pop("encoder", "hadamard"), spec.p,
                                beta=cfg.pop("beta", 2.0),
                                seed=cfg.pop("encoder_seed", 0), m=engine.m)
-        val, grad = phi_quadratic(spec.y)
+        val, grad = _phi_quadratic(spec.y)
         prob = make_lifted_problem(spec.X, enc, engine.m, val, grad)
         # Hessian of the lifted quadratic is S X^T X S^T / n, norm <= beta * L
         step_size = cfg.pop("step_size", None) or \
@@ -300,6 +492,32 @@ class CodedBCD(_SyncGradientStrategy):
                   "objective": "phi(Xw) (unregularized, exact-optimum family)",
                   "step_size": step_size},
             schedule=sched)
+
+    def run_batched(self, spec, engine, *, steps=200, trials=1, eval_every=1,
+                    **cfg):
+        check_trials(steps, trials, eval_every)
+        policy = self._policy(engine, cfg)
+        enc = _resolve_encoder(cfg.pop("encoder", "hadamard"), spec.p,
+                               beta=cfg.pop("beta", 2.0),
+                               seed=cfg.pop("encoder_seed", 0), m=engine.m)
+        val, grad = _phi_quadratic(spec.y)
+        prob = make_lifted_problem(spec.X, enc, engine.m, val, grad)
+        step_size = cfg.pop("step_size", None) or \
+            0.9 / (spec.lipschitz() * float(enc.beta))
+        batch = engine.sample_schedules(steps, policy, trials)
+        v0 = jnp.zeros((trials, engine.m, prob.XS.shape[-1]), jnp.float32)
+        v, tr = batched_scan_bcd(prob, jnp.asarray(batch.masks), step_size,
+                                 v0, eval_every=eval_every)
+        # batched bcd traces are post-commit (== scan_bcd's tr[1:] at s=1)
+        return TrialsResult(
+            strategy=self.name,
+            times=batch.times[:, eval_every - 1::eval_every],
+            objective=np.asarray(tr), w=np.asarray(v),
+            meta={"encoder": enc.name, "beta": enc.beta,
+                  "objective": "phi(Xw) (unregularized, exact-optimum family)",
+                  "step_size": step_size, "trials": trials,
+                  "eval_every": eval_every, "batched": True},
+            schedules=batch)
 
 
 # ---------------------------------------------------------------------------
@@ -340,3 +558,33 @@ class AsyncSGD(Strategy):
                   "max_staleness": int(trace.staleness.max()),
                   "step_size": step_size},
             schedule=trace)
+
+    def run_batched(self, spec, engine, *, steps=200, trials=1, eval_every=1,
+                    **cfg):
+        if spec.h == "l1":
+            raise ValueError("async baseline covers smooth objectives only")
+        m = engine.m
+        bound = int(cfg.pop("staleness_bound", 2 * m))
+        updates = int(cfg.pop("updates", steps * m))
+        check_trials(updates, trials, eval_every)
+        step_size = (cfg.pop("step_size", None) or _auto_step(spec)) / m
+        enc = make_encoder("uncoded", spec.n, beta=1.0).with_workers(m)
+        prob = make_encoded_problem(spec.X, spec.y, enc, m, lam=spec.lam)
+        batch = engine.sample_asyncs(updates, bound, trials)
+        w0 = jnp.asarray(cfg.pop("w0", np.zeros(spec.p)), jnp.float32)
+        w0 = jnp.tile(w0[None], (trials, 1))       # donated by the runner
+        w, tr = batched_scan_async(
+            prob, jnp.asarray(batch.workers), jnp.asarray(batch.staleness),
+            step_size, w0, buffer_size=bound + 1, h=spec.h,
+            eval_every=eval_every)
+        return TrialsResult(
+            strategy=self.name,
+            times=batch.times[:, eval_every - 1::eval_every],
+            objective=np.asarray(tr), w=np.asarray(w),
+            meta={"staleness_bound": bound, "updates": updates,
+                  "dropped": [int(d) for d in batch.dropped],
+                  "mean_staleness": float(batch.staleness.mean()),
+                  "max_staleness": int(batch.staleness.max()),
+                  "step_size": step_size, "trials": trials,
+                  "eval_every": eval_every, "batched": True},
+            schedules=batch)

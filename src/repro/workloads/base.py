@@ -103,6 +103,8 @@ class WorkloadRunResult:
 
     def to_record(self) -> dict:
         """JSON-serializable record (iterate omitted)."""
+        # np.asarray().tolist() converts whole traces in C instead of a
+        # per-element float() loop (same fix as RunResult.to_record)
         return {
             "workload": self.workload,
             "strategy": self.strategy,
@@ -111,10 +113,11 @@ class WorkloadRunResult:
             "final_metric": self.final_metric,
             "final_objective": self.final_objective,
             "wallclock_s": self.wallclock,
-            "times": [float(t) for t in self.times],
-            "objective": [float(v) for v in self.objective],
-            "metric_times": [float(t) for t in self.metric_times],
-            "metric": [float(v) for v in self.metric],
+            "times": np.asarray(self.times, dtype=float).tolist(),
+            "objective": np.asarray(self.objective, dtype=float).tolist(),
+            "metric_times": np.asarray(self.metric_times,
+                                       dtype=float).tolist(),
+            "metric": np.asarray(self.metric, dtype=float).tolist(),
             "meta": json_safe_meta(self.meta),
             "extras": self.extras,
         }
@@ -247,15 +250,9 @@ class Workload:
         return ClusterEngine(make_delay_model(delay or ps.delay), ps.m,
                              seed=ps.seed if seed is None else seed)
 
-    def run(self, strategy: str, engine: ClusterEngine | None = None, *,
-            preset: str | Preset = "smoke", data: Any = None,
-            **cfg) -> WorkloadRunResult:
-        """Run one strategy on this workload end-to-end and score it.
-
-        Raises ``UnsupportedStrategy`` (with the reason) when the strategy
-        cannot express this workload — harnesses turn that into a
-        skip-with-reason cell.
-        """
+    def _resolve_checked(self, strategy: str) -> str:
+        """Resolve the 'coded' alias and raise ``UnsupportedStrategy`` for
+        unknown / unsupported strategies (shared by run and run_trials)."""
         from repro.runtime.strategies import available_strategies
         strategy = self.resolve_strategy(strategy)
         # every workload lowering speaks in registry strategy names, so a
@@ -269,12 +266,49 @@ class Workload:
         if reason is not None:
             raise UnsupportedStrategy(
                 f"{strategy} cannot run workload '{self.name}': {reason}")
+        return strategy
+
+    def run(self, strategy: str, engine: ClusterEngine | None = None, *,
+            preset: str | Preset = "smoke", data: Any = None,
+            **cfg) -> WorkloadRunResult:
+        """Run one strategy on this workload end-to-end and score it.
+
+        Raises ``UnsupportedStrategy`` (with the reason) when the strategy
+        cannot express this workload — harnesses turn that into a
+        skip-with-reason cell.
+        """
+        strategy = self._resolve_checked(strategy)
         ps = self.preset(preset)
         if engine is None:
             engine = self.default_engine(ps)
         if data is None:
             data = self.build(ps)
         return self._run(strategy, engine, ps, data, **cfg)
+
+    def run_trials(self, strategy: str, engine: ClusterEngine | None = None,
+                   *, preset: str | Preset = "smoke", data: Any = None,
+                   trials: int = 1, eval_every: int = 1,
+                   **cfg) -> list[WorkloadRunResult]:
+        """``trials`` delay realizations of one cell (paper §5 Monte-Carlo
+        protocol), one scored result per realization.
+
+        The default drives ``run`` once per realization on
+        ``engine.trial(r)`` — correct for every workload, including the
+        chunked/ALS lowerings whose multi-dispatch structure cannot be
+        vmapped.  Workloads whose lowering is a single strategy run (ridge)
+        override this with the fused ``Strategy.run_batched`` path, where
+        the whole realization stack is one compiled program.  ``eval_every``
+        is honored by the batched overrides; this sequential fallback
+        records at full per-step resolution.
+        """
+        strategy = self._resolve_checked(strategy)
+        ps = self.preset(preset)
+        if engine is None:
+            engine = self.default_engine(ps)
+        if data is None:
+            data = self.build(ps)
+        return [self._run(strategy, engine.trial(r), ps, data, **dict(cfg))
+                for r in range(trials)]
 
     def _run(self, strategy: str, engine: ClusterEngine, ps: Preset,
              data: Any, **cfg) -> WorkloadRunResult:

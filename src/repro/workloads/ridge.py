@@ -67,14 +67,8 @@ class Ridge(Workload):
                    "not the ridge objective (use the logistic workload)"
         return None
 
-    def _run(self, strategy, engine, ps, data: RidgeData,
-             **cfg) -> WorkloadRunResult:
-        cfg.setdefault("k", ps.k)
-        if strategy == "async":
-            cfg.pop("k", None)
-        steps = cfg.pop("steps", ps.steps)
-        result = get_strategy(strategy).run(data.spec, engine, steps=steps,
-                                            **cfg)
+    def _score(self, strategy, ps, data: RidgeData, result) -> \
+            WorkloadRunResult:
         gap = np.maximum(np.asarray(result.objective) - data.f_star, 0.0)
         return WorkloadRunResult(
             workload=self.name, strategy=strategy, preset=ps.name,
@@ -86,3 +80,36 @@ class Ridge(Workload):
             meta={**result.meta, "f_star": data.f_star,
                   "final_rel_subopt": float(gap[-1] / max(abs(data.f_star),
                                                           1e-12))})
+
+    @staticmethod
+    def _cell_cfg(strategy, ps, cfg) -> tuple[int, dict]:
+        cfg.setdefault("k", ps.k)
+        if strategy == "async":
+            cfg.pop("k", None)
+        return cfg.pop("steps", ps.steps), cfg
+
+    def _run(self, strategy, engine, ps, data: RidgeData,
+             **cfg) -> WorkloadRunResult:
+        steps, cfg = self._cell_cfg(strategy, ps, cfg)
+        result = get_strategy(strategy).run(data.spec, engine, steps=steps,
+                                            **cfg)
+        return self._score(strategy, ps, data, result)
+
+    def run_trials(self, strategy, engine=None, *, preset="smoke", data=None,
+                   trials=1, eval_every=1, **cfg):
+        """Fused Monte-Carlo path: ridge lowers to ONE strategy run, so the
+        whole realization stack executes as a single compiled program via
+        ``Strategy.run_batched`` (one encode, one (R, T, m) schedule draw,
+        one vmapped scan) and each realization is scored independently."""
+        strategy = self._resolve_checked(strategy)
+        ps = self.preset(preset)
+        if engine is None:
+            engine = self.default_engine(ps)
+        if data is None:
+            data = self.build(ps)
+        steps, cfg = self._cell_cfg(strategy, ps, dict(cfg))
+        batched = get_strategy(strategy).run_batched(
+            data.spec, engine, steps=steps, trials=trials,
+            eval_every=eval_every, **cfg)
+        return [self._score(strategy, ps, data, batched.realization(r))
+                for r in range(trials)]

@@ -23,28 +23,78 @@ import json
 import os
 from typing import Sequence
 
+import numpy as np
+
 from repro.runtime.engine import ClusterEngine, make_delay_model
+from repro.runtime.strategies import (check_trials, json_safe_meta,
+                                      summary_stats)
 
-from .base import (UnsupportedStrategy, available_workloads, get_workload)
+from .base import (UnsupportedStrategy, WorkloadRunResult,
+                   available_workloads, get_workload)
 
-__all__ = ["run_workload_matrix", "write_json", "write_summary_csv", "main"]
+__all__ = ["run_workload_matrix", "trials_record", "write_json",
+           "write_summary_csv", "main"]
+
+
+def trials_record(results: "list[WorkloadRunResult]", *,
+                  delay: str, seed: int) -> dict:
+    """Aggregate R per-realization workload results into ONE JSON record:
+    stacked per-realization traces plus mean/p50/p95 wall-clock and metric
+    summaries.  Scalar ``final_metric`` / ``final_objective`` /
+    ``wallclock_s`` are across-trial means, so batched records drop into
+    every single-trial consumer (summary CSV, tables)."""
+    r0 = results[0]
+    final_metric = [r.final_metric for r in results]
+    final_obj = [r.final_objective for r in results]
+    wallclock = [r.wallclock for r in results]
+    return {
+        "workload": r0.workload, "strategy": r0.strategy,
+        "preset": r0.preset, "metric_name": r0.metric_name,
+        "delay": delay, "seed": seed, "trials": len(results),
+        "final_metric": float(np.mean(final_metric)),
+        "final_objective": float(np.mean(final_obj)),
+        "wallclock_s": float(np.mean(wallclock)),
+        "summary": {"trials": len(results),
+                    "wallclock_s": summary_stats(wallclock),
+                    "final_metric": summary_stats(final_metric),
+                    "final_objective": summary_stats(final_obj)},
+        "times": [np.asarray(r.times, dtype=float).tolist()
+                  for r in results],
+        "objective": [np.asarray(r.objective, dtype=float).tolist()
+                      for r in results],
+        "metric_times": [np.asarray(r.metric_times, dtype=float).tolist()
+                         for r in results],
+        "metric": [np.asarray(r.metric, dtype=float).tolist()
+                   for r in results],
+        "extras": [r.extras for r in results],
+        "meta": json_safe_meta(r0.meta),
+    }
 
 
 def run_workload_matrix(workloads: Sequence[str], strategies: Sequence[str],
                         *, preset: str = "smoke",
                         delays: Sequence[str] | None = None, seed: int = 0,
                         m: int | None = None, compute_time: float = 0.05,
+                        trials: int = 1, eval_every: int = 1,
                         **cfg) -> list[dict]:
     """Run every (workload, delay, strategy) cell; returns one record each.
 
     ``delays=None`` uses each workload's native paper delay model; ``m``
     overrides the preset's worker count.  Extra ``cfg`` (k=, encoder=,
     steps=, ...) is forwarded to every cell.
+
+    ``trials=R`` runs R delay realizations per cell (``Workload.run_trials``
+    — a single compiled program where the lowering allows, sequential
+    trial-seeded runs elsewhere); the cell's record then stacks the
+    per-realization traces and carries mean/p50/p95 summaries.
     """
     records = []
     for wl_name in workloads:
         wl = get_workload(wl_name)
         ps = wl.preset(preset)
+        # a bad trials/eval_every combination is a harness misconfiguration
+        # — abort up front rather than emit a matrix of skipped cells
+        check_trials(cfg.get("steps", ps.steps), trials, eval_every)
         data = wl.build(ps)
         for delay in (delays or [ps.delay]):
             engine = ClusterEngine(make_delay_model(delay),
@@ -60,6 +110,15 @@ def run_workload_matrix(workloads: Sequence[str], strategies: Sequence[str],
                     # keep their defining encoders.
                     cell_cfg.pop("encoder", None)
                 try:
+                    if trials > 1:
+                        results = wl.run_trials(strat, engine, preset=ps,
+                                                data=data, trials=trials,
+                                                eval_every=eval_every,
+                                                **cell_cfg)
+                        records.append({**base,
+                                        **trials_record(results, delay=delay,
+                                                        seed=seed)})
+                        continue
                     result = wl.run(strat, engine, preset=ps, data=data,
                                     **cell_cfg)
                 except ValueError as e:
@@ -121,6 +180,12 @@ def main(argv: Sequence[str] | None = None) -> list[dict]:
                     help="outer/inner step budget override")
     ap.add_argument("--encoder", default=None,
                     help="encoder override for the coded scheme")
+    ap.add_argument("--trials", type=int, default=1,
+                    help="delay realizations per cell (one compiled program "
+                         "where the lowering allows; records carry "
+                         "per-realization traces + mean/p50/p95 summaries)")
+    ap.add_argument("--eval-every", type=int, default=1,
+                    help="record stride inside batched runs")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="runs/workloads")
     ap.add_argument("--formats", default="json,csv")
@@ -140,7 +205,9 @@ def main(argv: Sequence[str] | None = None) -> list[dict]:
         cfg["encoder"] = args.encoder
 
     records = run_workload_matrix(workloads, strategies, preset=args.preset,
-                                  delays=delays, seed=args.seed, **cfg)
+                                  delays=delays, seed=args.seed,
+                                  trials=args.trials,
+                                  eval_every=args.eval_every, **cfg)
 
     os.makedirs(args.out, exist_ok=True)
     formats = {f.strip() for f in args.formats.split(",")}

@@ -1,0 +1,246 @@
+"""Batched-trial execution (DESIGN.md §9): vmapped runners vs sequential
+scans, trial-seeded sampling, eval_every striding, Pallas combine routing,
+and the --trials axis of both harnesses."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (bimodal_delays, hadamard_encoder, identity_encoder,
+                        make_encoded_problem, make_lifted_problem, pad_rows,
+                        phi_quadratic)
+from repro.kernels.coded_reduce import coded_combine_call
+from repro.runtime import (ClusterEngine, FastestK, ProblemSpec,
+                           batched_scan_async, batched_scan_bcd,
+                           batched_scan_gd, batched_scan_prox, get_strategy,
+                           scan_async, scan_bcd, scan_gd, scan_prox)
+
+M, K, P, N, T, R = 8, 6, 32, 128, 20, 3
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return ProblemSpec.synthetic(N, P, noise=0.5, lam=0.05, seed=0)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return ClusterEngine(bimodal_delays(), M, seed=0)
+
+
+@pytest.fixture(scope="module")
+def batch(engine):
+    return engine.sample_schedules(T, FastestK(K), R)
+
+
+@pytest.fixture(scope="module")
+def prob(spec):
+    return make_encoded_problem(spec.X, spec.y,
+                                pad_rows(hadamard_encoder(N, 2.0), M), M,
+                                lam=spec.lam)
+
+
+# ---------------------------------------------------------------------------
+# engine: trial-seeded batch sampling
+# ---------------------------------------------------------------------------
+
+def test_sample_schedules_shapes_and_determinism(engine, batch):
+    assert batch.masks.shape == (R, T, M)
+    assert batch.times.shape == (R, T)
+    again = engine.sample_schedules(T, FastestK(K), R)
+    np.testing.assert_array_equal(batch.masks, again.masks)
+    # realizations are genuinely distinct draws
+    assert not np.array_equal(batch.masks[0], batch.masks[1])
+
+
+def test_realization_r_is_trial_engine_r(engine, batch):
+    """Batched realization r == the standalone engine.trial(r) run, so
+    non-batchable cells can loop trials on identical realizations."""
+    for r in range(R):
+        sched = engine.trial(r).sample_schedule(T, FastestK(K))
+        np.testing.assert_array_equal(batch.masks[r], sched.masks)
+        np.testing.assert_array_equal(batch.times[r], sched.times)
+    # realization 0 is the engine's own (single-trial) realization
+    s0 = engine.sample_schedule(T, FastestK(K))
+    np.testing.assert_array_equal(batch.masks[0], s0.masks)
+
+
+def test_sample_asyncs_stacks_and_bounds(engine):
+    ab = engine.sample_asyncs(100, 4, R)
+    assert ab.workers.shape == ab.staleness.shape == ab.times.shape == (R, 100)
+    assert ab.staleness.max() <= 4
+    t0 = engine.sample_async(100, 4)
+    np.testing.assert_array_equal(ab.workers[0], t0.workers)
+    np.testing.assert_array_equal(ab.staleness[0], t0.staleness)
+
+
+# ---------------------------------------------------------------------------
+# batched runners match sequential execution on the same mask schedules
+# ---------------------------------------------------------------------------
+
+def test_batched_gd_matches_sequential(prob, batch):
+    masks = jnp.asarray(batch.masks)
+    w, tr = batched_scan_gd(prob, masks, 0.01, jnp.zeros((R, P)), h="l2")
+    for r in range(R):
+        ws, trs = scan_gd(prob, masks[r], 0.01, jnp.zeros(P), h="l2")
+        np.testing.assert_allclose(np.asarray(tr[r]), np.asarray(trs),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(w[r]), np.asarray(ws),
+                                   atol=1e-5)
+
+
+def test_batched_prox_matches_sequential(prob, batch):
+    masks = jnp.asarray(batch.masks)
+    w, tr = batched_scan_prox(prob, masks, 0.005, jnp.zeros((R, P)))
+    for r in range(R):
+        ws, trs = scan_prox(prob, masks[r], 0.005, jnp.zeros(P))
+        np.testing.assert_allclose(np.asarray(tr[r]), np.asarray(trs),
+                                   atol=1e-5)
+
+
+def test_batched_bcd_matches_sequential(spec, batch):
+    enc = pad_rows(hadamard_encoder(P, 2.0), M)
+    val, grad = phi_quadratic(spec.y)
+    lifted = make_lifted_problem(spec.X, enc, M, val, grad)
+    step = 0.9 / (spec.lipschitz() * 2.0)
+    b = lifted.XS.shape[-1]
+    masks = jnp.asarray(batch.masks)
+    v, tr = batched_scan_bcd(lifted, masks, step, jnp.zeros((R, M, b)))
+    for r in range(R):
+        vs, trs = scan_bcd(lifted, masks[r], step, jnp.zeros((M, b)))
+        # batched trace is post-commit == legacy trace[1:]
+        np.testing.assert_allclose(np.asarray(tr[r]), np.asarray(trs)[1:],
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(v[r]), np.asarray(vs),
+                                   atol=1e-5)
+
+
+def test_batched_async_matches_sequential(spec, engine):
+    prob = make_encoded_problem(spec.X, spec.y,
+                                identity_encoder(N).with_workers(M), M,
+                                lam=spec.lam)
+    ab = engine.sample_asyncs(80, 4, R)
+    w, tr = batched_scan_async(prob, jnp.asarray(ab.workers),
+                               jnp.asarray(ab.staleness), 0.002,
+                               jnp.zeros((R, P)), buffer_size=5)
+    for r in range(R):
+        ws, trs = scan_async(prob, jnp.asarray(ab.workers[r]),
+                             jnp.asarray(ab.staleness[r]), 0.002,
+                             jnp.zeros(P), buffer_size=5)
+        np.testing.assert_allclose(np.asarray(tr[r]), np.asarray(trs),
+                                   atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# eval_every striding
+# ---------------------------------------------------------------------------
+
+def test_eval_every_is_dense_subsample(prob, batch):
+    masks = jnp.asarray(batch.masks)
+    wd, dense = batched_scan_gd(prob, masks, 0.01, jnp.zeros((R, P)))
+    ws, strided = batched_scan_gd(prob, masks, 0.01, jnp.zeros((R, P)),
+                                  eval_every=5)
+    assert strided.shape == (R, T // 5)
+    np.testing.assert_allclose(np.asarray(strided),
+                               np.asarray(dense)[:, 4::5], atol=1e-6)
+    # the iterate path is identical — only the objective pass is strided
+    np.testing.assert_allclose(np.asarray(ws), np.asarray(wd), atol=1e-6)
+
+
+def test_eval_every_must_divide(prob, batch):
+    with pytest.raises(ValueError, match="eval_every"):
+        batched_scan_gd(prob, jnp.asarray(batch.masks), 0.01,
+                        jnp.zeros((R, P)), eval_every=7)
+
+
+# ---------------------------------------------------------------------------
+# Pallas combine kernel (interpret default + pad-to-block)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("P_", [128, 3000])
+def test_pallas_combine_matches_einsum(P_):
+    g = jax.random.normal(jax.random.key(0), (M, P_))
+    mask = (jax.random.uniform(jax.random.key(1), (M,)) > 0.3)
+    c = mask * (M / jnp.maximum(mask.sum(), 1.0))
+    # interpret=None resolves from the backend (interpreted off-TPU);
+    # P=3000 exercises the pad-to-block path that used to ValueError
+    out = coded_combine_call(g, c)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jnp.einsum("m,mp->p", c, g)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# strategy layer: run_batched
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["coded-gd", "uncoded", "coded-bcd",
+                                  "coded-lbfgs", "async"])
+def test_run_batched_realization0_matches_run(spec, engine, name):
+    batched = get_strategy(name).run_batched(spec, engine, steps=T,
+                                             trials=R, k=K)
+    single = get_strategy(name).run(spec, engine, steps=T, k=K)
+    assert batched.objective.shape[0] == R
+    np.testing.assert_allclose(batched.objective[0],
+                               np.asarray(single.objective), atol=2e-5)
+    np.testing.assert_array_equal(batched.times[0], single.times)
+    rec = batched.to_record()
+    assert rec["trials"] == R
+    for key in ("mean", "p50", "p95"):
+        assert key in rec["summary"]["wallclock_s"]
+
+
+def test_run_batched_eval_every_strides_times(spec, engine):
+    dense = get_strategy("coded-gd").run_batched(spec, engine, steps=T,
+                                                 trials=R, k=K)
+    strided = get_strategy("coded-gd").run_batched(spec, engine, steps=T,
+                                                   trials=R, k=K,
+                                                   eval_every=5)
+    np.testing.assert_allclose(strided.objective, dense.objective[:, 4::5],
+                               atol=1e-6)
+    np.testing.assert_array_equal(strided.times, dense.times[:, 4::5])
+
+
+def test_run_batched_trials_result_realization(spec, engine):
+    res = get_strategy("coded-gd").run_batched(spec, engine, steps=T,
+                                               trials=R, k=K)
+    one = res.realization(1)
+    np.testing.assert_array_equal(one.objective, res.objective[1])
+    assert one.schedule is res.schedules.realization(1)
+
+
+# ---------------------------------------------------------------------------
+# harnesses: --trials axis
+# ---------------------------------------------------------------------------
+
+def test_compare_matrix_with_trials(tmp_path):
+    from repro.runtime.compare import main
+    out = tmp_path / "cmp"
+    records = main(["--strategies", "coded-gd,uncoded",
+                    "--delays", "bimodal", "--n", "128", "--p", "32",
+                    "--m", "8", "--k", "6", "--steps", "20",
+                    "--trials", "3", "--out", str(out)])
+    assert len(records) == 2
+    for rec in records:
+        assert rec["trials"] == 3
+        assert len(rec["times"]) == 3 and len(rec["times"][0]) == 20
+        assert rec["summary"]["trials"] == 3
+    import csv as _csv
+    rows = list(_csv.reader((out / "compare.csv").open()))
+    # one row per (cell, trial, step) + header
+    assert len(rows) - 1 == 2 * 3 * 20
+    assert {row[3] for row in rows[1:]} == {"0", "1", "2"}
+
+
+def test_workload_matrix_with_trials():
+    from repro.workloads.runner import run_workload_matrix
+    records = run_workload_matrix(["ridge"], ["uncoded"], preset="smoke",
+                                  trials=2, steps=T)
+    (rec,) = records
+    assert rec["trials"] == 2
+    assert len(rec["metric"]) == 2 and len(rec["metric"][0]) == T
+    assert "final_metric" in rec["summary"]
+    # batched fast path: realization 0 == the single-trial cell
+    (single,) = run_workload_matrix(["ridge"], ["uncoded"], preset="smoke",
+                                    steps=T)
+    np.testing.assert_allclose(rec["metric"][0], single["metric"], atol=2e-5)

@@ -255,8 +255,9 @@ def test_compare_cli_writes_traces(tmp_path):
         assert len(rec["times"]) == len(rec["objective"]) > 0
         assert rec["wallclock_s"] > 0
     rows = list(_csv.reader((out / "compare.csv").open()))
-    assert rows[0] == ["workload", "strategy", "delay", "step", "time_s",
-                       "objective", "metric_name", "final_metric", "skipped"]
+    assert rows[0] == ["workload", "strategy", "delay", "trial", "step",
+                       "time_s", "objective", "metric_name", "final_metric",
+                       "skipped"]
     assert len(rows) - 1 == sum(len(r["times"]) for r in data)
 
 
