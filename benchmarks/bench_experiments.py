@@ -1,0 +1,112 @@
+"""Placement-axis benchmark: single vs vmap vs sharded trial execution
+(DESIGN.md §10).
+
+The same declarative experiment — the ridge workload's smoke preset,
+coded-gd, one delay model, R delay realizations — run under each
+``PlacementAxis`` mode, timed end-to-end through ``plan -> execute`` (so
+schedule sampling, scoring and record building are all included, exactly
+what a user of the matrix pays).  On a 1-device CPU host ``sharded`` falls
+back to ``vmap`` (the record carries the device count, so trajectories
+from multi-device hosts are distinguishable), and the traces of all three
+placements are verified to agree to 1e-5.
+
+Writes ``BENCH_experiments.json`` at the repo root.
+
+    PYTHONPATH=src python -m benchmarks.bench_experiments            # full
+    PYTHONPATH=src python -m benchmarks.bench_experiments --smoke    # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.experiments import (DelayAxis, ExperimentSpec, PlacementAxis,
+                               ProblemAxis, StrategyAxis, TrialsAxis,
+                               execute, plan)
+
+from .common import emit
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(_ROOT, "BENCH_experiments.json")
+
+PLACEMENTS = ("single", "vmap", "sharded")
+
+
+def _spec(placement: str, trials: int, steps: int) -> ExperimentSpec:
+    return ExperimentSpec(
+        problems=(ProblemAxis.from_workload("ridge", "smoke"),),
+        strategies=(StrategyAxis("coded-gd"),),
+        delays=DelayAxis.of("bimodal"),
+        trials=TrialsAxis(trials=trials),
+        placement=PlacementAxis(mode=placement), steps=steps)
+
+
+def _time_execute(spec: ExperimentSpec, iters: int) -> tuple[float, list]:
+    pl = plan(spec)
+    execute(pl)                               # warm the jit caches
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        result = execute(pl)
+    return (time.perf_counter() - t0) / iters, result.records
+
+
+def run(trials: int = 16, steps: int = 40, iters: int = 3,
+        out_json: str = DEFAULT_OUT) -> list[dict]:
+    import jax
+    ndev = len(jax.devices())
+    results, traces = [], {}
+    base_s = None
+    for placement in PLACEMENTS:
+        secs, records = _time_execute(_spec(placement, trials, steps), iters)
+        rec = records[0]
+        traces[placement] = np.asarray(rec["objective"], dtype=float)
+        base_s = secs if base_s is None else base_s
+        speedup = base_s / max(secs, 1e-12)
+        meta = rec.get("meta", {})
+        emit(f"experiments_{placement}_R{trials}", secs * 1e6,
+             f"speedup_vs_single={speedup:.1f}x;devices={ndev}")
+        results.append({
+            "placement": placement, "R": trials, "steps": steps,
+            "devices": ndev,
+            "placement_devices": meta.get("placement_devices"),
+            "seconds_per_matrix": secs,
+            "speedup_vs_single": speedup,
+        })
+    err = max(float(np.abs(traces[p] - traces["vmap"]).max())
+              for p in PLACEMENTS)
+    for r in results:
+        r["traces_match"] = bool(err < 1e-5)
+        r["max_abs_trace_err"] = err
+    os.makedirs(os.path.dirname(os.path.abspath(out_json)), exist_ok=True)
+    with open(out_json, "w") as f:
+        json.dump({"bench": "experiment placement axis (ridge smoke, "
+                            "coded-gd)",
+                   "backend": jax.default_backend(), "devices": ndev,
+                   "results": results}, f, indent=1)
+    print(f"# wrote {out_json}")
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="benchmarks.bench_experiments")
+    ap.add_argument("--trials", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI preset: R=4, 12 steps, 1 timing iter")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        trials, steps, iters = 4, 12, 1
+    else:
+        trials, steps, iters = args.trials, args.steps, args.iters
+    print("name,us_per_call,derived")
+    return run(trials=trials, steps=steps, iters=iters, out_json=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,8 @@ import time
 def main() -> None:
     from . import (bench_spectrum, bench_ridge, bench_lasso, bench_logistic,
                    bench_matrix_factorization, bench_kernels, bench_coded_lm,
-                   bench_runtime, bench_encoding, bench_trials)
+                   bench_runtime, bench_encoding, bench_trials,
+                   bench_experiments)
     print("name,us_per_call,derived")
     suites = [
         ("spectrum (paper Figs 5-6)", bench_spectrum.run),
@@ -27,6 +28,8 @@ def main() -> None:
         ("kernels", bench_kernels.run),
         ("runtime scan-fused vs legacy loops", bench_runtime.run),
         ("batched trials vs sequential loop (DESIGN §9)", bench_trials.run),
+        ("experiment placement axis single/vmap/sharded (DESIGN §10)",
+         bench_experiments.run),
     ]
     t_all = time.time()
     for title, fn in suites:

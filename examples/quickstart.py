@@ -1,38 +1,47 @@
-"""Quickstart: encoded distributed ridge regression via the cluster runtime.
+"""Quickstart: encoded distributed ridge regression via the experiment API.
 
 The master waits for the fastest k of m workers every iteration; the
 Hadamard encoding makes the fastest-k gradient a faithful estimate of the
-full gradient regardless of WHICH workers straggle.  The runtime engine
-simulates the cluster (bimodal delays from the paper) and the whole
-iteration loop runs as one device-resident `lax.scan`.
+full gradient regardless of WHICH workers straggle.  One declarative
+``ExperimentSpec`` names the whole cell — problem, strategy, delay model,
+cluster shape — and ``run`` compiles it to a plan and executes it
+(DESIGN.md §10); the iteration loop itself is a single device-resident
+``lax.scan``.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import bimodal_delays, identity_encoder, \
-    make_encoded_problem, original_objective
-from repro.runtime import ClusterEngine, ProblemSpec, get_strategy
+from repro.core import identity_encoder, make_encoded_problem, \
+    original_objective
+from repro.experiments import (DelayAxis, ExperimentSpec, ProblemAxis,
+                               StrategyAxis, run)
+from repro.runtime import ProblemSpec
 
 m, k = 16, 12           # 16 workers, wait for the fastest 12
 
 # 1. the ORIGINAL problem every strategy solves (ridge, lam = 0.05)
-spec = ProblemSpec.synthetic(n=512, p=128, noise=0.5, lam=0.05, seed=0)
+ps = ProblemSpec.synthetic(n=512, p=128, noise=0.5, lam=0.05, seed=0)
 
-# 2. a simulated cluster: bimodal delays (paper §5.3), barrier accounting
-engine = ClusterEngine(bimodal_delays(), m, seed=0)
+# 2. one declarative spec: that problem + encoded gradient descent on a
+#    simulated cluster with bimodal delays (paper §5.3, barrier accounting)
+spec = ExperimentSpec(
+    problems=(ProblemAxis.from_spec(ps),),
+    strategies=(StrategyAxis("coded-gd", encoder="hadamard", k=k),),
+    delays=DelayAxis.of("bimodal", m=m),
+    steps=200)
 
-# 3. run encoded gradient descent, oblivious to the erasures
-res = get_strategy("coded-gd").run(spec, engine, steps=200, k=k,
-                                   encoder="hadamard")
+# 3. plan + execute; the single cell's outcome carries both the JSON-ready
+#    record and the raw RunResult (trace, final iterate), oblivious to the
+#    erasures
+res = run(spec).outcomes[0].result
 
 # 4. compare against the exact ridge solution
-w_star = spec.w_star()
-prob = make_encoded_problem(spec.X, spec.y, identity_encoder(spec.n), m,
-                            lam=spec.lam)
+w_star = ps.w_star()
+prob = make_encoded_problem(ps.X, ps.y, identity_encoder(ps.n), m,
+                            lam=ps.lam)
 f_star = float(original_objective(prob, jnp.asarray(w_star), h="l2"))
-f0 = float(original_objective(prob, jnp.zeros(spec.p), h="l2"))
+f0 = float(original_objective(prob, jnp.zeros(ps.p), h="l2"))
 print(f"f(w_0)   = {f0:.4f}")
 print(f"f(w_1)   = {res.objective[0]:.4f}   (trace[t] = f after update t+1)")
 print(f"f(w_T)   = {res.final_objective:.4f}   "

@@ -1,8 +1,9 @@
-"""The paper's headline comparison (§5) through the workloads API:
+"""The paper's headline comparison (§5) through the experiment API:
 the ridge workload (encoded L-BFGS vs uncoded vs replication vs async
 stale-gradient SGD) under three delay distributions, measured in SIMULATED
 WALL-CLOCK (not iterations) and scored with the workload's paper metric —
-suboptimality gap against the closed-form ground truth.
+suboptimality gap against the closed-form ground truth.  The whole matrix
+is ONE declarative ``ExperimentSpec`` (DESIGN.md §10).
 
 Sync strategies pay the fastest-k barrier per iteration; async pays per
 arrival — so async takes many more (stale) steps in the same span of time.
@@ -13,13 +14,17 @@ Run:  PYTHONPATH=src python examples/strategy_comparison.py
 """
 import numpy as np
 
-from repro.workloads import run_workload_matrix
+from repro.experiments import (DelayAxis, ExperimentSpec, ProblemAxis,
+                               StrategyAxis, run)
 
 STRATEGIES = ["coded", "uncoded", "replication", "async"]
 DELAYS = ["bimodal", "power_law", "exponential"]
 
-records = run_workload_matrix(["ridge"], STRATEGIES, preset="smoke",
-                              delays=DELAYS, seed=0)
+spec = ExperimentSpec(
+    problems=(ProblemAxis.from_workload("ridge", "smoke"),),
+    strategies=tuple(StrategyAxis(s) for s in STRATEGIES),
+    delays=DelayAxis(delays=tuple(DELAYS)))
+records = run(spec).records
 
 # time (simulated seconds) for each strategy to first push the
 # suboptimality gap below 1.1x the best final gap under that delay model

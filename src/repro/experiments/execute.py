@@ -1,0 +1,277 @@
+"""Run an :class:`ExperimentPlan` and collect canonical per-cell records.
+
+This is the ONE place where "how a cell executes" is decided — every
+harness (``repro.experiments.run``, the legacy ``runtime.compare`` and
+``workloads.run`` CLIs, benchmarks, examples) funnels through
+``execute(plan)``:
+
+  * synthetic/spec problems run through the strategy registry
+    (``Strategy.run`` / ``run_batched``), workload problems through
+    ``Workload.run`` / ``run_trials`` — with the plan's placement deciding
+    whether R realizations run as a host loop (``single``), one vmapped
+    program (``vmap``) or ``shard_map``-ped across devices (``sharded``);
+  * every cell yields one **canonical record** (see below) plus the raw
+    result object for programmatic callers.
+
+Canonical record schema (the union of the three legacy schemas; every
+record carries the core keys, workload records add theirs):
+
+  core:      strategy, delay, seed, metric_name, final_metric,
+             final_objective, wallclock_s, times, objective, meta
+  synthetic: n, p, m, k
+  workload:  workload, preset, metric_times, metric, extras
+  batched:   trials, summary {mean/p50/p95 wall-clock + finals}
+  skipped:   the identifying keys + ``skipped`` (the reason) only
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from .io import print_table, write_json, write_summary_csv, write_trace_csv
+from .plan import ExperimentPlan, PlannedCell
+from .spec import ExperimentSpec
+
+__all__ = ["CellOutcome", "ExperimentResult", "execute", "run",
+           "resolve_policy", "trials_record"]
+
+
+def resolve_policy(name: str, m: int, k: int, *, deadline: float = 1.0,
+                   beta: float = 2.0):
+    """Build an active-set policy from its CLI name + cell shape."""
+    from repro.runtime.engine import make_policy
+    if name in ("fastest-k", "adversarial"):
+        return make_policy(name, k=k)
+    if name == "adaptive-k":
+        # k acts as the floor; the policy grows the set per the overlap rule
+        return make_policy(name, beta=beta, k_min=k)
+    if name == "deadline":
+        return make_policy(name, deadline=deadline, k_min=max(1, m // 4))
+    raise KeyError(f"unknown policy '{name}'")
+
+
+def trials_record(results: list, *, delay: str, seed: int) -> dict:
+    """Aggregate R per-realization workload results into ONE JSON record:
+    stacked per-realization traces plus mean/p50/p95 wall-clock and metric
+    summaries.  Scalar ``final_metric`` / ``final_objective`` /
+    ``wallclock_s`` are across-trial means, so batched records drop into
+    every single-trial consumer (summary CSV, tables)."""
+    from repro.runtime.strategies import json_safe_meta, summary_stats
+    r0 = results[0]
+    final_metric = [r.final_metric for r in results]
+    final_obj = [r.final_objective for r in results]
+    wallclock = [r.wallclock for r in results]
+    return {
+        "workload": r0.workload, "strategy": r0.strategy,
+        "preset": r0.preset, "metric_name": r0.metric_name,
+        "delay": delay, "seed": seed, "trials": len(results),
+        "final_metric": float(np.mean(final_metric)),
+        "final_objective": float(np.mean(final_obj)),
+        "wallclock_s": float(np.mean(wallclock)),
+        "summary": {"trials": len(results),
+                    "wallclock_s": summary_stats(wallclock),
+                    "final_metric": summary_stats(final_metric),
+                    "final_objective": summary_stats(final_obj)},
+        "times": [np.asarray(r.times, dtype=float).tolist()
+                  for r in results],
+        "objective": [np.asarray(r.objective, dtype=float).tolist()
+                      for r in results],
+        "metric_times": [np.asarray(r.metric_times, dtype=float).tolist()
+                         for r in results],
+        "metric": [np.asarray(r.metric, dtype=float).tolist()
+                   for r in results],
+        "extras": [r.extras for r in results],
+        "meta": json_safe_meta(r0.meta),
+    }
+
+
+@dataclasses.dataclass
+class CellOutcome:
+    """One executed cell: the canonical record plus the raw result object
+    (RunResult / TrialsResult / WorkloadRunResult / list of them; None for
+    a skipped cell) for callers that need iterates or schedules."""
+    cell: PlannedCell
+    record: dict
+    result: Any = None
+
+    @property
+    def skipped(self) -> bool:
+        return "skipped" in self.record
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    """Everything ``execute`` produced, with the shared writers attached."""
+    plan: ExperimentPlan
+    outcomes: list
+
+    @property
+    def spec(self) -> ExperimentSpec:
+        return self.plan.spec
+
+    @property
+    def records(self) -> list[dict]:
+        return [o.record for o in self.outcomes]
+
+    def to_json(self, path: str) -> None:
+        write_json(self.records, path)
+
+    def to_csv(self, path: str) -> None:
+        write_trace_csv(self.records, path)
+
+    def to_summary_csv(self, path: str) -> None:
+        write_summary_csv(self.records, path)
+
+    def print_table(self) -> None:
+        print_table(self.records)
+
+
+def execute(plan: ExperimentPlan) -> ExperimentResult:
+    """Run every planned cell; never aborts mid-matrix for per-cell
+    incompatibilities (those become skip-with-reason records)."""
+    caches: dict = {}
+    outcomes = [_execute_cell(cell, caches) for cell in plan.cells]
+    return ExperimentResult(plan=plan, outcomes=outcomes)
+
+
+def run(spec: ExperimentSpec) -> ExperimentResult:
+    """``execute(plan(spec))`` in one call."""
+    from .plan import plan as _plan
+    return execute(_plan(spec))
+
+
+# ---------------------------------------------------------------------------
+# Cell execution
+# ---------------------------------------------------------------------------
+
+def _engine(cell: PlannedCell):
+    from repro.runtime.engine import ClusterEngine, make_delay_model
+    return ClusterEngine(make_delay_model(cell.delay), cell.m,
+                         compute_time=cell.compute_time, seed=cell.seed)
+
+
+def _execute_cell(cell: PlannedCell, caches: dict) -> CellOutcome:
+    if cell.kind == "workload":
+        return _execute_workload_cell(cell, caches)
+    return _execute_synthetic_cell(cell, caches)
+
+
+def _synthetic_problem(cell: PlannedCell, caches: dict):
+    from repro.runtime.strategies import ProblemSpec
+    key = ("problem", id(cell.problem))
+    if key not in caches:
+        pr = cell.problem
+        if pr.kind == "spec":
+            caches[key] = pr.problem
+        else:
+            seed = pr.seed if pr.seed is not None else cell.seed
+            caches[key] = ProblemSpec.synthetic(
+                pr.n, pr.p, noise=pr.noise, lam=pr.lam, h=pr.h, seed=seed)
+    return caches[key]
+
+
+def _execute_synthetic_cell(cell: PlannedCell, caches: dict) -> CellOutcome:
+    from repro.runtime.strategies import get_strategy
+    spec_ = _synthetic_problem(cell, caches)
+    st = cell.strategy
+    engine = _engine(cell)
+    cfg = st.options_dict()
+    if cell.resolved_strategy == "async":
+        if st.staleness_bound is not None:
+            cfg.setdefault("staleness_bound", st.staleness_bound)
+        if st.async_updates is not None:
+            cfg.setdefault("updates", st.async_updates)
+    else:
+        if cell.resolved_strategy.startswith("coded"):
+            cfg.setdefault("encoder", st.encoder if st.encoder is not None
+                           else "hadamard")
+        cfg.setdefault("policy", resolve_policy(
+            st.policy or "fastest-k", cell.m, cell.k,
+            deadline=st.deadline, beta=st.policy_beta))
+    base = {"strategy": cell.resolved_strategy, "delay": cell.delay,
+            "n": spec_.n, "p": spec_.p, "m": cell.m, "k": cell.k,
+            "seed": cell.seed}
+    try:
+        if cell.trials > 1:
+            result = get_strategy(cell.resolved_strategy).run_batched(
+                spec_, engine, steps=cell.steps, trials=cell.trials,
+                eval_every=cell.eval_every, placement=cell.placement, **cfg)
+        else:
+            result = get_strategy(cell.resolved_strategy).run(
+                spec_, engine, steps=cell.steps, **cfg)
+    except ValueError as e:
+        print(f"# skipping {cell.resolved_strategy} x {cell.delay}: {e}")
+        return CellOutcome(cell, {**base, "skipped": str(e),
+                                  "metric_name": "objective"})
+    rec = result.to_record()
+    rec.update(base, metric_name="objective",
+               final_metric=rec["final_objective"])
+    return CellOutcome(cell, rec, result)
+
+
+def _workload_data(cell: PlannedCell, wl, ps, caches: dict):
+    key = ("data", cell.problem.workload, cell.problem.preset)
+    if key not in caches:
+        caches[key] = wl.build(ps)
+    return caches[key]
+
+
+def _execute_workload_cell(cell: PlannedCell, caches: dict) -> CellOutcome:
+    from repro.workloads import UnsupportedStrategy, get_workload
+    pr, st = cell.problem, cell.strategy
+    wl = get_workload(pr.workload)
+    ps = wl.preset(pr.preset)
+    base = {"workload": wl.name, "strategy": cell.resolved_strategy,
+            "delay": cell.delay, "preset": ps.name, "seed": cell.seed}
+    if cell.skip is not None:
+        return CellOutcome(cell, {**base, "skipped": cell.skip,
+                                  "metric_name": wl.metric_name})
+    data = _workload_data(cell, wl, ps, caches)
+    engine = _engine(cell)
+    cell_cfg = st.options_dict()
+    if st.k is not None:
+        cell_cfg.setdefault("k", st.k)
+    if cell.steps is not None:
+        cell_cfg.setdefault("steps", cell.steps)
+    if st.encoder is not None:
+        cell_cfg.setdefault("encoder", st.encoder)
+    if not cell.resolved_strategy.startswith("coded"):
+        # encoder targets the coded scheme; uncoded/replication keep their
+        # defining encoders.
+        cell_cfg.pop("encoder", None)
+    # strategy-level config flows into the workload's strategy dispatch the
+    # same way it does for synthetic cells — a StrategyAxis field the user
+    # set must never be silently dropped
+    if cell.resolved_strategy == "async":
+        if st.staleness_bound is not None:
+            cell_cfg.setdefault("staleness_bound", st.staleness_bound)
+        if st.async_updates is not None:
+            cell_cfg.setdefault("updates", st.async_updates)
+    elif st.policy is not None:
+        k = st.k if st.k is not None else ps.k
+        cell_cfg.setdefault("policy", resolve_policy(
+            st.policy, cell.m, k, deadline=st.deadline,
+            beta=st.policy_beta))
+    try:
+        if cell.trials > 1:
+            results = wl.run_trials(st.name, engine, preset=ps, data=data,
+                                    trials=cell.trials,
+                                    eval_every=cell.eval_every,
+                                    placement=cell.placement, **cell_cfg)
+            return CellOutcome(
+                cell, {**base, **trials_record(results, delay=cell.delay,
+                                               seed=cell.seed)}, results)
+        result = wl.run(st.name, engine, preset=ps, data=data, **cell_cfg)
+    except ValueError as e:
+        # UnsupportedStrategy (runtime-detected), or a config clash (e.g.
+        # --m below the preset's k) — record the reason, keep the matrix
+        # going (same contract as the synthetic path)
+        if not isinstance(e, UnsupportedStrategy):
+            print(f"# skipping {cell.resolved_strategy} x {cell.delay}: {e}")
+        return CellOutcome(cell, {**base, "skipped": str(e),
+                                  "metric_name": wl.metric_name})
+    rec = result.to_record()
+    rec.update(delay=cell.delay, seed=cell.seed)
+    return CellOutcome(cell, rec, result)

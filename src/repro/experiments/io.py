@@ -1,0 +1,110 @@
+"""Shared experiment record I/O (the ONE copy; DESIGN.md §10).
+
+Every harness record — synthetic compare cells, workload cells, batched
+Monte-Carlo cells, skip-with-reason cells — flows through the same three
+writers:
+
+  * :func:`write_json`        — the full per-cell records, traces included;
+  * :func:`write_trace_csv`   — long format, one row per recorded
+    (workload, strategy, delay, trial, step) point;
+  * :func:`write_summary_csv` — one row per cell: the paper-table view.
+
+``runtime/compare.py`` and ``workloads/runner.py`` import these instead of
+carrying their own copies.
+"""
+from __future__ import annotations
+
+import csv
+import json
+
+__all__ = ["write_json", "trace_rows", "write_trace_csv",
+           "write_summary_csv", "print_table"]
+
+
+def write_json(records: list[dict], path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1)
+
+
+def trace_rows(rec: dict):
+    """Yield (trial, step, time, objective) rows from a record's traces —
+    single-trial records carry flat (T,) lists (trial 0), batched records a
+    (R, T) nesting."""
+    times, obj = rec["times"], rec["objective"]
+    if times and isinstance(times[0], (list, tuple)):
+        for r, (ts, os_) in enumerate(zip(times, obj)):
+            for i, (t, o) in enumerate(zip(ts, os_)):
+                yield r, i, t, o
+    else:
+        for i, (t, o) in enumerate(zip(times, obj)):
+            yield 0, i, t, o
+
+
+def write_trace_csv(records: list[dict], path: str) -> None:
+    """Long-format trace table: one row per recorded (strategy, delay,
+    trial, step).
+
+    Every row repeats the cell's ``metric_name`` / ``final_metric`` so the
+    CSV is self-describing; a skipped cell contributes a single row whose
+    ``skipped`` column carries the reason.
+    """
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["workload", "strategy", "delay", "trial", "step",
+                    "time_s", "objective", "metric_name", "final_metric",
+                    "skipped"])
+        for rec in records:
+            wl = rec.get("workload", "")
+            metric_name = rec.get("metric_name", "objective")
+            if "skipped" in rec:
+                w.writerow([wl, rec["strategy"], rec["delay"], "", "", "",
+                            "", metric_name, "", rec["skipped"]])
+                continue
+            final_metric = f"{rec['final_metric']:.8e}"
+            for r, i, t, obj in trace_rows(rec):
+                w.writerow([wl, rec["strategy"], rec["delay"], r, i,
+                            f"{t:.6f}", f"{obj:.8e}", metric_name,
+                            final_metric, ""])
+
+
+def write_summary_csv(records: list[dict], path: str) -> None:
+    """One row per cell: the paper-table view (final metric + wall-clock)."""
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["workload", "strategy", "delay", "preset", "metric_name",
+                    "final_metric", "final_objective", "wallclock_s",
+                    "skipped"])
+        for r in records:
+            if "skipped" in r:
+                w.writerow([r.get("workload", ""), r["strategy"], r["delay"],
+                            r.get("preset", ""), r.get("metric_name", ""),
+                            "", "", "", r["skipped"]])
+            else:
+                w.writerow([r.get("workload", ""), r["strategy"], r["delay"],
+                            r.get("preset", ""), r["metric_name"],
+                            f"{r['final_metric']:.6g}",
+                            f"{r['final_objective']:.6g}",
+                            f"{r['wallclock_s']:.2f}", ""])
+
+
+def print_table(records: list[dict]) -> None:
+    """Human summary of a record list on stdout (shared by all CLIs)."""
+    has_wl = any(r.get("workload") for r in records)
+    head = (f"{'workload':10s} " if has_wl else "") + \
+        (f"{'strategy':14s} {'delay':12s} {'final f':>12s} "
+         f"{'metric':>22s} {'wallclock_s':>12s} {'trialsxT':>9s}")
+    print(head)
+    for rec in records:
+        lead = f"{rec.get('workload', '-'):10s} " if has_wl else ""
+        if "skipped" in rec:
+            print(f"{lead}{rec['strategy']:14s} {rec['delay']:12s} "
+                  f"{'skipped:':>12s} {rec['skipped']}")
+            continue
+        metric = f"{rec['metric_name']}={rec['final_metric']:.5g}"
+        obj = rec["objective"]
+        shape = (f"{len(obj)}x{len(obj[0])}"
+                 if obj and isinstance(obj[0], (list, tuple))
+                 else f"1x{len(obj)}")
+        print(f"{lead}{rec['strategy']:14s} {rec['delay']:12s} "
+              f"{rec['final_objective']:12.5f} {metric:>22s} "
+              f"{rec['wallclock_s']:12.2f} {shape:>9s}")

@@ -1,0 +1,164 @@
+"""``python -m repro.experiments.run`` — the unified experiment CLI.
+
+One command for every strategy x delay x workload x trials x placement
+cell the paper's §5 protocol needs:
+
+    # synthetic quadratic (the old runtime.compare matrix)
+    PYTHONPATH=src python -m repro.experiments.run \\
+        --strategies coded-gd,uncoded,async --delays bimodal,power_law
+
+    # workload matrix (the old workloads.run matrix)
+    PYTHONPATH=src python -m repro.experiments.run \\
+        --workloads ridge,logistic --strategies coded,uncoded \\
+        --trials 8 --placement sharded
+
+Argv is parsed into an :class:`ExperimentSpec`, compiled with ``plan`` and
+run with ``execute`` — exactly the path the legacy ``runtime.compare`` and
+``workloads.run`` CLIs now delegate to.  ``--plan-only`` prints the
+resolved cell list (including pre-materialized skips) without running.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+from typing import Sequence
+
+from .execute import ExperimentResult, execute
+from .plan import plan
+from .spec import (DelayAxis, ExperimentSpec, PlacementAxis, ProblemAxis,
+                   StrategyAxis, TrialsAxis)
+
+__all__ = ["build_spec", "main"]
+
+
+def _csv_list(s: str | None) -> list[str]:
+    return [x.strip() for x in (s or "").split(",") if x.strip()]
+
+
+def build_spec(args: argparse.Namespace) -> ExperimentSpec:
+    """An ``ExperimentSpec`` from parsed CLI args (shared by this CLI and
+    the legacy front-ends)."""
+    delays = tuple(_csv_list(args.delays))
+    if args.workloads:
+        problems = tuple(ProblemAxis.from_workload(w, args.preset)
+                         for w in _csv_list(args.workloads))
+    else:
+        problems = (ProblemAxis.synthetic(args.n, args.p, noise=args.noise,
+                                          lam=args.lam, h=args.h),)
+        if not delays:
+            delays = ("bimodal", "power_law", "exponential")
+    strategies = tuple(
+        StrategyAxis(name=s, encoder=args.encoder, policy=args.policy,
+                     k=args.k, deadline=args.deadline,
+                     policy_beta=args.policy_beta,
+                     staleness_bound=args.staleness_bound,
+                     async_updates=args.async_updates)
+        for s in _csv_list(args.strategies))
+    return ExperimentSpec(
+        problems=problems, strategies=strategies,
+        delays=DelayAxis(delays=delays, m=args.m,
+                         compute_time=args.compute_time),
+        trials=TrialsAxis(trials=args.trials, eval_every=args.eval_every,
+                          seed=args.seed),
+        placement=PlacementAxis(mode=args.placement),
+        steps=args.steps)
+
+
+def add_axis_flags(ap: argparse.ArgumentParser, *,
+                   strategies: str = "coded-gd,uncoded,replication,async",
+                   delays: str | None = "bimodal,power_law,exponential",
+                   encoder: str | None = None,
+                   policy: str | None = None) -> None:
+    """The axis flags shared by this CLI and the legacy front-ends (their
+    historical defaults differ, hence the parameters)."""
+    from repro.core.encoding import available_encoders
+    from repro.runtime.strategies import available_strategies
+    ap.add_argument("--strategies", default=strategies,
+                    help=f"comma list from {available_strategies()}; with "
+                         f"--workloads, 'coded' resolves per workload")
+    ap.add_argument("--delays", default=delays,
+                    help="comma list of delay models (empty with "
+                         "--workloads: each workload's native model)")
+    ap.add_argument("--n", type=int, default=512)
+    ap.add_argument("--p", type=int, default=128)
+    ap.add_argument("--noise", type=float, default=0.5)
+    ap.add_argument("--lam", type=float, default=0.05)
+    ap.add_argument("--h", default="l2", choices=["l2", "l1", "none"])
+    ap.add_argument("--m", type=int, default=None,
+                    help="workers (default 16; workload presets own this)")
+    ap.add_argument("--k", type=int, default=None,
+                    help="fastest-k (default 3m/4 / preset k)")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="iteration budget (default 200; workload presets "
+                         "own this)")
+    ap.add_argument("--encoder", default=encoder,
+                    help=f"encoder for coded strategies, from "
+                         f"{available_encoders()} (operator encoders are "
+                         f"matrix-free)")
+    ap.add_argument("--policy", default=policy,
+                    choices=["fastest-k", "adaptive-k", "deadline",
+                             "adversarial"])
+    ap.add_argument("--compute-time", type=float, default=0.05)
+    ap.add_argument("--deadline", type=float, default=1.0,
+                    help="time budget for --policy deadline (sim seconds)")
+    ap.add_argument("--policy-beta", type=float, default=2.0,
+                    help="overlap beta for --policy adaptive-k")
+    ap.add_argument("--staleness-bound", type=int, default=None)
+    ap.add_argument("--async-updates", type=int, default=None)
+    ap.add_argument("--trials", type=int, default=1,
+                    help="delay realizations per cell (the Monte-Carlo "
+                         "axis)")
+    ap.add_argument("--eval-every", type=int, default=1,
+                    help="record the objective every s steps (s | steps); "
+                         "0 records the final objective only")
+    ap.add_argument("--placement", default="vmap",
+                    choices=["single", "vmap", "sharded"],
+                    help="how the realization axis executes: host loop / "
+                         "one vmapped program / shard_map over the device "
+                         "mesh")
+    ap.add_argument("--seed", type=int, default=0)
+
+
+def main(argv: Sequence[str] | None = None) -> ExperimentResult:
+    ap = argparse.ArgumentParser(
+        prog="repro.experiments.run",
+        description="unified spec -> plan -> execute experiment harness")
+    ap.add_argument("--workloads", default=None,
+                    help="comma list of paper-§5 workloads "
+                         "(ridge/lasso/logistic/mf); omit for the "
+                         "synthetic quadratic")
+    ap.add_argument("--preset", default="smoke",
+                    choices=["smoke", "bench", "paper"],
+                    help="workload scale preset (with --workloads)")
+    # --delays defaults to unset: synthetic matrices then get the compare
+    # triple (in build_spec), workload matrices their native paper models —
+    # while an EXPLICIT --delays always wins, workload or not
+    add_axis_flags(ap, delays=None)
+    ap.add_argument("--plan-only", action="store_true",
+                    help="print the resolved cell list and exit")
+    ap.add_argument("--out", default="runs/experiments")
+    ap.add_argument("--formats", default="json,csv,summary")
+    args = ap.parse_args(argv)
+
+    spec = build_spec(args)
+    pl = plan(spec)
+    if args.plan_only:
+        print(pl.describe())
+        return ExperimentResult(plan=pl, outcomes=[])
+    result = execute(pl)
+
+    os.makedirs(args.out, exist_ok=True)
+    formats = {f.strip() for f in args.formats.split(",")}
+    if "json" in formats:
+        result.to_json(os.path.join(args.out, "experiments.json"))
+    if "csv" in formats:
+        result.to_csv(os.path.join(args.out, "experiments.csv"))
+    if "summary" in formats:
+        result.to_summary_csv(os.path.join(args.out, "summary.csv"))
+    result.print_table()
+    print(f"wrote {sorted(formats)} to {args.out}/")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,195 @@
+"""Declarative experiment axes (DESIGN.md §10).
+
+An :class:`ExperimentSpec` is the single way to say "run this matrix": a
+frozen dataclass tree naming every axis of the paper's §5 protocol —
+
+  * :class:`ProblemAxis`    — WHAT is solved: a synthetic quadratic, a
+    concrete ``ProblemSpec``, or a registered workload at a preset;
+  * :class:`StrategyAxis`   — WHO solves it: registry strategy name (or the
+    per-workload ``'coded'`` alias) + encoder + policy / async config;
+  * :class:`DelayAxis`      — the simulated cluster: delay models, worker
+    count, per-iteration compute time;
+  * :class:`TrialsAxis`     — the Monte-Carlo axis: R delay realizations,
+    objective record stride, master seed;
+  * :class:`PlacementAxis`  — HOW the realization axis executes: one run
+    per realization (``single``), one vmapped program (``vmap``), or
+    ``shard_map`` over the device mesh (``sharded``).
+
+Specs never execute anything themselves: ``plan(spec)`` compiles the axes
+into an explicit cell list and ``execute(plan)`` runs it (see
+``experiments.plan`` / ``experiments.execute``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+__all__ = [
+    "ProblemAxis", "StrategyAxis", "DelayAxis", "TrialsAxis",
+    "PlacementAxis", "ExperimentSpec", "PLACEMENTS",
+]
+
+
+PLACEMENTS = ("single", "vmap", "sharded")
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemAxis:
+    """One problem of the matrix.  Three variants, selected by ``kind``:
+
+    * ``'synthetic'`` — the compare harness's quadratic:
+      f(w) = 1/(2n)||Xw - y||^2 + lam h(w) on an lsq dataset of shape
+      (n, p), built at plan time with the spec's master seed;
+    * ``'spec'``      — a concrete, caller-built ``runtime.ProblemSpec``
+      (arbitrary data) carried verbatim in ``problem``;
+    * ``'workload'``  — a registered paper-§5 workload (ridge / lasso /
+      logistic / mf) at one of its presets; the preset owns dims, cluster
+      shape, step budget and the paper metric.
+    """
+    kind: str = "synthetic"
+    # -- synthetic fields --
+    n: int = 512
+    p: int = 128
+    noise: float = 0.5
+    lam: float = 0.05
+    h: str = "l2"
+    seed: int | None = None        # None -> the spec's TrialsAxis seed
+    # -- spec variant --
+    problem: Any = None            # a runtime.ProblemSpec instance
+    # -- workload variant --
+    workload: str | None = None
+    preset: str = "smoke"
+
+    @staticmethod
+    def synthetic(n: int = 512, p: int = 128, *, noise: float = 0.5,
+                  lam: float = 0.05, h: str = "l2",
+                  seed: int | None = None) -> "ProblemAxis":
+        return ProblemAxis(kind="synthetic", n=n, p=p, noise=noise, lam=lam,
+                           h=h, seed=seed)
+
+    @staticmethod
+    def from_spec(problem) -> "ProblemAxis":
+        return ProblemAxis(kind="spec", problem=problem)
+
+    @staticmethod
+    def from_workload(name: str, preset: str = "smoke") -> "ProblemAxis":
+        return ProblemAxis(kind="workload", workload=name, preset=preset)
+
+    def validate(self) -> None:
+        if self.kind not in ("synthetic", "spec", "workload"):
+            raise ValueError(f"unknown ProblemAxis kind '{self.kind}'")
+        if self.kind == "workload" and not self.workload:
+            raise ValueError("workload ProblemAxis needs a workload name")
+        if self.kind == "spec" and self.problem is None:
+            raise ValueError("spec ProblemAxis needs a ProblemSpec instance")
+
+
+@dataclasses.dataclass(frozen=True)
+class StrategyAxis:
+    """One strategy column: registry name plus its per-strategy config.
+
+    ``encoder=None`` keeps the strategy's own default; sync strategies read
+    the policy fields, ``async`` reads ``staleness_bound`` /
+    ``async_updates``.  ``options`` is an escape hatch of extra ``(key,
+    value)`` pairs forwarded verbatim to the strategy/workload call
+    (``step_size=``, ``memory=``, a prebuilt policy instance, ...).
+    """
+    name: str
+    encoder: str | Any | None = None   # registry name or LinearEncoder
+    policy: str | None = None          # None -> fastest-k
+    k: int | None = None               # None -> 3m/4 (synthetic) / preset k
+    deadline: float = 1.0              # --policy deadline budget
+    policy_beta: float = 2.0           # --policy adaptive-k overlap beta
+    staleness_bound: int | None = None   # async only
+    async_updates: int | None = None     # async only
+    options: tuple = ()                # extra (key, value) cfg pairs
+
+    def options_dict(self) -> dict:
+        return dict(self.options)
+
+
+@dataclasses.dataclass(frozen=True)
+class DelayAxis:
+    """The simulated cluster: which delay distributions, how many workers.
+
+    ``delays=()`` means "each workload's native paper delay model" (only
+    valid when every problem is a workload).  ``m=None`` defers to the
+    workload preset (or the compare default of 16 for synthetic problems).
+    """
+    delays: tuple = ()
+    m: int | None = None
+    compute_time: float = 0.05
+
+    @staticmethod
+    def of(*delays: str, m: int | None = None,
+           compute_time: float = 0.05) -> "DelayAxis":
+        return DelayAxis(delays=tuple(delays), m=m,
+                         compute_time=compute_time)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrialsAxis:
+    """The Monte-Carlo axis: R delay realizations per cell, each seeded
+    from the master ``seed`` via the ``(seed, r)`` child stream (DESIGN.md
+    §9).  ``eval_every=s`` records the objective every s steps inside the
+    compiled loop; ``eval_every=0`` records the final objective only."""
+    trials: int = 1
+    eval_every: int = 1
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementAxis:
+    """How the realization axis is placed on hardware:
+
+    * ``'single'``  — one run per realization, host loop (the pre-§9 path;
+      also what non-batchable lowerings do regardless of placement);
+    * ``'vmap'``    — all R realizations in ONE compiled program on one
+      device (``jax.vmap`` over the leading axis, DESIGN.md §9);
+    * ``'sharded'`` — R realizations ``shard_map``-ped across the local
+      device mesh on a ``trials`` axis, vmapped within each shard; falls
+      back to ``vmap`` when one device is present or R is not divisible
+      by the device count.
+    """
+    mode: str = "vmap"
+    mesh_axis: str = "trials"
+
+    def validate(self) -> None:
+        if self.mode not in PLACEMENTS:
+            raise ValueError(f"unknown placement '{self.mode}'; have "
+                             f"{PLACEMENTS}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """The full declarative experiment: problems x strategies x delays,
+    run for R realizations under one placement.
+
+    ``steps`` overrides every problem's iteration budget (synthetic
+    default 200; workload presets own theirs).  Compile with
+    ``experiments.plan``, run with ``experiments.execute``.
+    """
+    problems: tuple
+    strategies: tuple
+    delays: DelayAxis = DelayAxis()
+    trials: TrialsAxis = TrialsAxis()
+    placement: PlacementAxis = PlacementAxis()
+    steps: int | None = None
+
+    def validate(self) -> None:
+        if not self.problems:
+            raise ValueError("ExperimentSpec needs at least one problem")
+        if not self.strategies:
+            raise ValueError("ExperimentSpec needs at least one strategy")
+        for pr in self.problems:
+            pr.validate()
+        self.placement.validate()
+        if self.trials.trials < 1:
+            raise ValueError("trials must be >= 1")
+        if not self.delays.delays:
+            for pr in self.problems:
+                if pr.kind != "workload":
+                    raise ValueError(
+                        "DelayAxis.delays may only be empty (= workload-"
+                        "native delay models) when every problem is a "
+                        "workload")

@@ -7,9 +7,11 @@ Four parts:
   * ``strategies`` — one ``Strategy`` interface + registry over every scheme
                      the paper compares (encoded GD/prox/L-BFGS/BCD, uncoded,
                      replication, async stale-gradient SGD);
-  * ``runners``    — ``lax.scan``-fused device-resident iteration loops;
-  * ``compare``    — strategy x delay-model CLI harness emitting
-                     wall-clock-vs-objective traces (JSON/CSV).
+  * ``runners``    — ``lax.scan``-fused device-resident iteration loops,
+                     batched (vmap) and sharded (shard_map over a 'trials'
+                     mesh axis) trial variants;
+  * ``compare``    — legacy strategy x delay-model CLI, now a thin
+                     front-end over ``repro.experiments`` (DESIGN.md §10).
 """
 from .engine import (DELAY_MODELS, POLICIES, ActiveSetPolicy, AdaptiveK,
                      AdversarialRotation, AsyncBatch, AsyncTrace,
@@ -17,19 +19,23 @@ from .engine import (DELAY_MODELS, POLICIES, ActiveSetPolicy, AdaptiveK,
                      Schedule, ScheduleBatch, make_delay_model, make_policy)
 from .runners import (batched_scan_async, batched_scan_bcd, batched_scan_gd,
                       batched_scan_prox, scan_async, scan_bcd, scan_gd,
-                      scan_prox)
+                      scan_prox, sharded_scan_async, sharded_scan_gd,
+                      sharded_scan_prox, trials_device_count)
 from .strategies import (ProblemSpec, RunResult, Strategy, TrialsResult,
-                         available_strategies, get_strategy,
-                         register_strategy, summary_stats)
+                         available_strategies, check_trials, get_strategy,
+                         register_strategy, resolve_eval_every,
+                         summary_stats)
 __all__ = [
     "DELAY_MODELS", "POLICIES", "ActiveSetPolicy", "AdaptiveK",
     "AdversarialRotation", "AsyncBatch", "AsyncTrace", "ClusterEngine",
     "Deadline", "FastestK", "IterationEvent", "Schedule", "ScheduleBatch",
     "make_delay_model", "make_policy", "scan_async", "scan_bcd", "scan_gd",
     "scan_prox", "batched_scan_async", "batched_scan_bcd", "batched_scan_gd",
-    "batched_scan_prox", "ProblemSpec", "RunResult", "Strategy",
-    "TrialsResult", "available_strategies", "get_strategy",
-    "register_strategy", "summary_stats", "run_matrix",
+    "batched_scan_prox", "sharded_scan_async", "sharded_scan_gd",
+    "sharded_scan_prox", "trials_device_count", "ProblemSpec", "RunResult",
+    "Strategy", "TrialsResult", "available_strategies", "check_trials",
+    "get_strategy", "register_strategy", "resolve_eval_every",
+    "summary_stats", "run_matrix",
 ]
 
 

@@ -1,50 +1,37 @@
-"""Strategy x delay-model x encoder comparison harness (paper §5 plots).
+"""Strategy x delay-model comparison CLI (paper §5 plots) — legacy front-end.
 
-Runs every requested straggler-mitigation strategy under every requested
-delay distribution ON THE SAME delay realization (shared engine seed) and
-emits wall-clock-vs-objective traces as JSON and CSV — the inputs for the
-paper's headline comparison figures.  ``benchmarks/`` and ``examples/``
-consume ``run_matrix`` / the emitted files instead of hand-rolling loops.
+Historically this module owned the matrix loop; it is now a thin shim that
+parses its (unchanged) flags into a declarative
+``repro.experiments.ExperimentSpec`` and delegates to the unified
+``plan -> execute`` path (DESIGN.md §10).  Records, JSON and CSV outputs
+are identical to what this harness always produced; new code should use
+``python -m repro.experiments.run`` or the ``repro.experiments`` API
+directly.
 
     PYTHONPATH=src python -m repro.runtime.compare \\
         --strategies coded-gd,uncoded,replication,async \\
         --delays bimodal,power_law,exponential
 
-``--encoder`` accepts any registry name, including the matrix-free operator
-encoders ('fast-hadamard', 'block-diagonal') — those encode without ever
-materializing S, so the same matrix runs at data sizes where the dense
-``(beta*n, n)`` construction cannot be allocated.
-
-``--trials R`` adds the paper's Monte-Carlo axis: every cell runs R delay
-realizations as ONE compiled program (``Strategy.run_batched``, DESIGN.md
-§9) and its record carries the (R, T) trace stack plus mean/p50/p95
-wall-clock and final-objective summaries.  ``--eval-every s`` strides the
-objective evaluation inside the compiled loop.
-
-``--workload`` swaps the default synthetic quadratic for a paper-§5 workload
-from ``repro.workloads`` (ridge / lasso / logistic / mf): the workload owns
-dataset synthesis, lowering, and its paper metric, and every cell's record
-carries ``metric_name`` / ``final_metric``.  Cells whose strategy cannot run
-a given workload (or objective) become skip-with-reason records instead of
-silently vanishing from the matrix.
+``--encoder`` accepts any registry name including the matrix-free operator
+encoders ('fast-hadamard', 'block-diagonal'); ``--trials R`` adds the
+Monte-Carlo axis (one compiled program per cell, DESIGN.md §9) with
+``--placement`` choosing single/vmap/sharded execution; ``--workload``
+swaps the synthetic quadratic for a paper-§5 workload, whose preset then
+owns problem shape, objective and policy.
 """
 from __future__ import annotations
 
 import argparse
-import csv
-import json
 import os
 from typing import Sequence
 
-import numpy as np
+from repro.experiments import (DelayAxis, ExperimentSpec, PlacementAxis,
+                               ProblemAxis, StrategyAxis, TrialsAxis,
+                               execute, plan, print_table, trace_rows,
+                               write_json)
+from repro.experiments import write_trace_csv as write_csv  # noqa: F401
 
-from repro.core.encoding import available_encoders
-
-from .engine import ClusterEngine, make_delay_model, make_policy
-from .strategies import ProblemSpec, RunResult, available_strategies, \
-    check_trials, get_strategy
-
-__all__ = ["run_matrix", "write_json", "write_csv", "main"]
+__all__ = ["run_matrix", "write_json", "write_csv", "trace_rows", "main"]
 
 
 def run_matrix(strategies: Sequence[str], delays: Sequence[str], *,
@@ -58,20 +45,14 @@ def run_matrix(strategies: Sequence[str], delays: Sequence[str], *,
                deadline: float = 1.0, policy_beta: float = 2.0,
                noise: float = 0.5, workload: str | None = None,
                preset: str = "smoke", trials: int = 1,
-               eval_every: int = 1) -> list[dict]:
+               eval_every: int = 1, placement: str = "vmap") -> list[dict]:
     """Run the full comparison matrix; returns one record per cell.
 
-    Every record carries ``metric_name`` / ``final_metric`` (the plain
-    quadratic path scores the objective itself; a ``workload`` cell scores
-    its paper metric).  A strategy incompatible with the objective or
-    workload becomes a skip-with-reason record instead of aborting the
-    matrix — downstream tables can show WHY the cell is empty.
-
-    ``trials=R`` runs R delay realizations per cell as ONE compiled program
-    (``Strategy.run_batched``); the record then carries the (R, T) trace
-    stack plus mean/p50/p95 wall-clock and final-objective summaries, and
-    scalar ``final_metric`` / ``wallclock_s`` become across-trial means.
-    ``eval_every=s`` records the objective every s steps (s | steps).
+    Legacy API shim: the kwargs are compiled into an ``ExperimentSpec``
+    and executed by ``repro.experiments`` — see that package for the
+    record schema (``metric_name`` / ``final_metric`` on every cell,
+    skip-with-reason records, (R, T) trace stacks + mean/p50/p95 summaries
+    when ``trials > 1``).
     """
     if workload is not None:
         ignored = [flag for flag, val, default in [
@@ -86,167 +67,33 @@ def run_matrix(strategies: Sequence[str], delays: Sequence[str], *,
                   f"workload preset owns problem shape, objective and "
                   f"policy; use repro.workloads.Workload.run(**cfg) for "
                   f"fine-grained control")
-        return _run_workload_matrix(workload, strategies, delays,
-                                    preset=preset, m=m, k=k, steps=steps,
-                                    encoder=encoder, seed=seed,
-                                    compute_time=compute_time, trials=trials,
-                                    eval_every=eval_every)
-    m = 16 if m is None else m          # workload presets own m/steps when
-    steps = 200 if steps is None else steps  # --workload is given
-    # a bad trials/eval_every combination is a harness misconfiguration, not
-    # a per-cell incompatibility — fail the matrix up front instead of
-    # letting the skip-with-reason handler turn every cell into a skip
-    check_trials(steps, trials, eval_every)
-    spec = ProblemSpec.synthetic(n, p, noise=noise, lam=lam, h=h, seed=seed)
-    k = k if k is not None else max(1, (3 * m) // 4)
-    records = []
-    for delay_name in delays:
-        engine = ClusterEngine(make_delay_model(delay_name), m,
-                               compute_time=compute_time, seed=seed)
-        for strat_name in strategies:
-            cfg: dict = {}
-            if strat_name == "async":
-                if staleness_bound is not None:
-                    cfg["staleness_bound"] = staleness_bound
-                if async_updates is not None:
-                    cfg["updates"] = async_updates
-            else:
-                if strat_name.startswith("coded"):
-                    cfg["encoder"] = encoder
-                cfg["policy"] = _make_policy(policy, m, k,
-                                             deadline=deadline,
-                                             beta=policy_beta)
-            base = {"strategy": strat_name, "delay": delay_name, "n": n,
-                    "p": p, "m": m, "k": k, "seed": seed}
-            try:
-                if trials > 1:
-                    result = get_strategy(strat_name).run_batched(
-                        spec, engine, steps=steps, trials=trials,
-                        eval_every=eval_every, **cfg)
-                else:
-                    result: RunResult = get_strategy(strat_name).run(
-                        spec, engine, steps=steps, **cfg)
-            except ValueError as e:
-                print(f"# skipping {strat_name} x {delay_name}: {e}")
-                records.append({**base, "skipped": str(e),
-                                "metric_name": "objective"})
-                continue
-            rec = result.to_record()
-            rec.update(base, metric_name="objective",
-                       final_metric=rec["final_objective"])
-            records.append(rec)
-    return records
-
-
-def _run_workload_matrix(workload: str, strategies: Sequence[str],
-                         delays: Sequence[str], *, preset: str,
-                         m: int | None, k: int | None, steps: int | None,
-                         encoder: str, seed: int, compute_time: float,
-                         trials: int = 1, eval_every: int = 1) -> list[dict]:
-    """The ``--workload`` axis: delegate to the workloads experiment runner
-    (ONE cell loop for both harnesses), constrained to a single workload."""
-    from repro.workloads.runner import run_workload_matrix
-    cfg: dict = {"encoder": encoder}
-    if k is not None:
-        cfg["k"] = k
-    if steps is not None:
-        cfg["steps"] = steps
-    return run_workload_matrix([workload], strategies, preset=preset,
-                               delays=list(delays), seed=seed, m=m,
-                               compute_time=compute_time, trials=trials,
-                               eval_every=eval_every, **cfg)
-
-
-def _make_policy(name: str, m: int, k: int, *, deadline: float = 1.0,
-                 beta: float = 2.0):
-    if name in ("fastest-k", "adversarial"):
-        return make_policy(name, k=k)
-    if name == "adaptive-k":
-        # k acts as the floor; the policy grows the set per the overlap rule
-        return make_policy(name, beta=beta, k_min=k)
-    if name == "deadline":
-        return make_policy(name, deadline=deadline, k_min=max(1, m // 4))
-    raise KeyError(f"unknown policy '{name}'")
-
-
-def write_json(records: list[dict], path: str) -> None:
-    with open(path, "w") as f:
-        json.dump(records, f, indent=1)
-
-
-def trace_rows(rec: dict):
-    """Yield (trial, step, time, objective) rows from a record's traces —
-    single-trial records carry flat (T,) lists (trial 0), batched records a
-    (R, T) nesting."""
-    times, obj = rec["times"], rec["objective"]
-    if times and isinstance(times[0], (list, tuple)):
-        for r, (ts, os_) in enumerate(zip(times, obj)):
-            for i, (t, o) in enumerate(zip(ts, os_)):
-                yield r, i, t, o
+        problems = (ProblemAxis.from_workload(workload, preset),)
+        strategy_axes = tuple(StrategyAxis(name=s, encoder=encoder, k=k)
+                              for s in strategies)
     else:
-        for i, (t, o) in enumerate(zip(times, obj)):
-            yield 0, i, t, o
-
-
-def write_csv(records: list[dict], path: str) -> None:
-    """Long-format trace table: one row per recorded (strategy, delay,
-    trial, step).
-
-    Every row repeats the cell's ``metric_name`` / ``final_metric`` so the
-    CSV is self-describing; a skipped cell contributes a single row whose
-    ``skipped`` column carries the reason.
-    """
-    with open(path, "w", newline="") as f:
-        w = csv.writer(f)
-        w.writerow(["workload", "strategy", "delay", "trial", "step",
-                    "time_s", "objective", "metric_name", "final_metric",
-                    "skipped"])
-        for rec in records:
-            wl = rec.get("workload", "")
-            metric_name = rec.get("metric_name", "objective")
-            if "skipped" in rec:
-                w.writerow([wl, rec["strategy"], rec["delay"], "", "", "",
-                            "", metric_name, "", rec["skipped"]])
-                continue
-            final_metric = f"{rec['final_metric']:.8e}"
-            for r, i, t, obj in trace_rows(rec):
-                w.writerow([wl, rec["strategy"], rec["delay"], r, i,
-                            f"{t:.6f}", f"{obj:.8e}", metric_name,
-                            final_metric, ""])
+        problems = (ProblemAxis.synthetic(n, p, noise=noise, lam=lam, h=h),)
+        strategy_axes = tuple(
+            StrategyAxis(name=s, encoder=encoder, policy=policy, k=k,
+                         deadline=deadline, policy_beta=policy_beta,
+                         staleness_bound=staleness_bound,
+                         async_updates=async_updates)
+            for s in strategies)
+    spec = ExperimentSpec(
+        problems=problems, strategies=strategy_axes,
+        delays=DelayAxis(delays=tuple(delays), m=m,
+                         compute_time=compute_time),
+        trials=TrialsAxis(trials=trials, eval_every=eval_every, seed=seed),
+        placement=PlacementAxis(mode=placement), steps=steps)
+    return execute(plan(spec)).records
 
 
 def main(argv: Sequence[str] | None = None) -> list[dict]:
     ap = argparse.ArgumentParser(
         prog="repro.runtime.compare",
-        description="strategy x delay-model wall-clock comparison harness")
-    ap.add_argument("--strategies", default="coded-gd,uncoded,replication,async",
-                    help=f"comma list from {available_strategies()}")
-    ap.add_argument("--delays", default="bimodal,power_law,exponential",
-                    help="comma list of delay models")
-    ap.add_argument("--n", type=int, default=512)
-    ap.add_argument("--p", type=int, default=128)
-    ap.add_argument("--m", type=int, default=None,
-                    help="workers (default 16; --workload presets own this)")
-    ap.add_argument("--k", type=int, default=None, help="fastest-k (default 3m/4)")
-    ap.add_argument("--steps", type=int, default=None,
-                    help="iterations (default 200; --workload presets own "
-                         "this)")
-    ap.add_argument("--lam", type=float, default=0.05)
-    ap.add_argument("--h", default="l2", choices=["l2", "l1", "none"])
-    ap.add_argument("--encoder", default="hadamard",
-                    help=f"encoder for coded strategies, from "
-                         f"{available_encoders()} (operator encoders are "
-                         f"matrix-free)")
-    ap.add_argument("--policy", default="fastest-k",
-                    choices=["fastest-k", "adaptive-k", "deadline",
-                             "adversarial"])
-    ap.add_argument("--compute-time", type=float, default=0.05)
-    ap.add_argument("--deadline", type=float, default=1.0,
-                    help="time budget for --policy deadline (sim seconds)")
-    ap.add_argument("--policy-beta", type=float, default=2.0,
-                    help="overlap beta for --policy adaptive-k")
-    ap.add_argument("--staleness-bound", type=int, default=None)
-    ap.add_argument("--async-updates", type=int, default=None)
+        description="strategy x delay-model wall-clock comparison harness "
+                    "(legacy front-end over repro.experiments)")
+    from repro.experiments.run import add_axis_flags
+    add_axis_flags(ap, encoder="hadamard", policy="fastest-k")
     ap.add_argument("--workload", default=None,
                     help="run a paper-§5 workload from repro.workloads "
                          "(ridge/lasso/logistic/mf) instead of the default "
@@ -255,14 +102,6 @@ def main(argv: Sequence[str] | None = None) -> list[dict]:
     ap.add_argument("--preset", default="smoke",
                     choices=["smoke", "bench", "paper"],
                     help="workload scale preset (with --workload)")
-    ap.add_argument("--trials", type=int, default=1,
-                    help="delay realizations per cell; > 1 runs the whole "
-                         "stack as one compiled program (records carry "
-                         "per-realization traces + mean/p50/p95 summaries)")
-    ap.add_argument("--eval-every", type=int, default=1,
-                    help="record the objective every s steps in batched "
-                         "runs (s must divide the schedule length)")
-    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="runs/compare")
     ap.add_argument("--formats", default="json,csv")
     args = ap.parse_args(argv)
@@ -276,8 +115,9 @@ def main(argv: Sequence[str] | None = None) -> list[dict]:
         staleness_bound=args.staleness_bound,
         async_updates=args.async_updates,
         deadline=args.deadline, policy_beta=args.policy_beta,
-        workload=args.workload, preset=args.preset, trials=args.trials,
-        eval_every=args.eval_every)
+        noise=args.noise, workload=args.workload, preset=args.preset,
+        trials=args.trials, eval_every=args.eval_every,
+        placement=args.placement)
 
     os.makedirs(args.out, exist_ok=True)
     formats = {f.strip() for f in args.formats.split(",")}
@@ -285,22 +125,7 @@ def main(argv: Sequence[str] | None = None) -> list[dict]:
         write_json(records, os.path.join(args.out, "compare.json"))
     if "csv" in formats:
         write_csv(records, os.path.join(args.out, "compare.csv"))
-
-    print(f"{'strategy':14s} {'delay':12s} {'final f':>12s} "
-          f"{'metric':>22s} {'wallclock_s':>12s} {'trialsxT':>9s}")
-    for rec in records:
-        if "skipped" in rec:
-            print(f"{rec['strategy']:14s} {rec['delay']:12s} "
-                  f"{'skipped:':>12s} {rec['skipped']}")
-            continue
-        metric = f"{rec['metric_name']}={rec['final_metric']:.5g}"
-        obj = rec["objective"]
-        shape = (f"{len(obj)}x{len(obj[0])}"
-                 if obj and isinstance(obj[0], (list, tuple))
-                 else f"1x{len(obj)}")
-        print(f"{rec['strategy']:14s} {rec['delay']:12s} "
-              f"{rec['final_objective']:12.5f} {metric:>22s} "
-              f"{rec['wallclock_s']:12.2f} {shape:>9s}")
+    print_table(records)
     print(f"wrote {sorted(formats)} to {args.out}/")
     return records
 

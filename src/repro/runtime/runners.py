@@ -30,7 +30,10 @@ from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec
 
 from repro.core.data_parallel import (EncodedProblem, masked_gradient,
                                       original_objective, prox_l1)
@@ -40,6 +43,8 @@ __all__ = [
     "scan_gd", "scan_prox", "scan_bcd", "scan_async",
     "batched_scan_gd", "batched_scan_prox", "batched_scan_bcd",
     "batched_scan_async",
+    "sharded_scan_gd", "sharded_scan_prox", "sharded_scan_async",
+    "trials_device_count",
 ]
 
 
@@ -191,6 +196,17 @@ def scan_async(prob: EncodedProblem, workers: jax.Array, staleness: jax.Array,
 # Batched-trial runners: vmap over the leading realization axis
 # ---------------------------------------------------------------------------
 
+def _batched_gd(prob: EncodedProblem, masks: jax.Array, step_size,
+                w0: jax.Array, h: str = "l2", eval_every: int = 1):
+    def one(masks_r, w0_r):
+        return _strided_scan(
+            lambda w, mask: _gd_step(prob, w, mask, step_size, h),
+            lambda w: original_objective(prob, w, h=h),
+            w0_r, masks_r, eval_every)
+
+    return jax.vmap(one)(masks, w0)
+
+
 @partial(jax.jit, static_argnames=("h", "eval_every"), donate_argnums=(3,))
 def batched_scan_gd(prob: EncodedProblem, masks: jax.Array, step_size,
                     w0: jax.Array, h: str = "l2", eval_every: int = 1):
@@ -201,10 +217,15 @@ def batched_scan_gd(prob: EncodedProblem, masks: jax.Array, step_size,
     trace (R, T // eval_every)) with trace[r, j] = f(w after step
     (j+1)*eval_every) of realization r.
     """
+    return _batched_gd(prob, masks, step_size, w0, h, eval_every)
+
+
+def _batched_prox(prob: EncodedProblem, masks: jax.Array, step_size,
+                  w0: jax.Array, eval_every: int = 1):
     def one(masks_r, w0_r):
         return _strided_scan(
-            lambda w, mask: _gd_step(prob, w, mask, step_size, h),
-            lambda w: original_objective(prob, w, h=h),
+            lambda w, mask: _prox_step(prob, w, mask, step_size),
+            lambda w: original_objective(prob, w, h="l1"),
             w0_r, masks_r, eval_every)
 
     return jax.vmap(one)(masks, w0)
@@ -215,13 +236,7 @@ def batched_scan_prox(prob: EncodedProblem, masks: jax.Array, step_size,
                       w0: jax.Array, eval_every: int = 1):
     """R realizations of encoded ISTA in one compiled program (see
     ``batched_scan_gd`` for the axis/donation/eval_every conventions)."""
-    def one(masks_r, w0_r):
-        return _strided_scan(
-            lambda w, mask: _prox_step(prob, w, mask, step_size),
-            lambda w: original_objective(prob, w, h="l1"),
-            w0_r, masks_r, eval_every)
-
-    return jax.vmap(one)(masks, w0)
+    return _batched_prox(prob, masks, step_size, w0, eval_every)
 
 
 @lru_cache(maxsize=8)
@@ -259,16 +274,9 @@ def batched_scan_bcd(prob: LiftedProblem, masks: jax.Array, step_size,
                eval_every=eval_every)
 
 
-@partial(jax.jit, static_argnames=("buffer_size", "h", "eval_every"),
-         donate_argnums=(4,))
-def batched_scan_async(prob: EncodedProblem, workers: jax.Array,
-                       staleness: jax.Array, step_size, w0: jax.Array,
-                       buffer_size: int, h: str = "l2", eval_every: int = 1):
-    """R realizations of async stale-gradient SGD in one compiled program.
-
-    workers/staleness: (R, U) stacked event streams; w0: (R, p) (donated).
-    Returns (w (R, p), trace (R, U // eval_every)).
-    """
+def _batched_async(prob: EncodedProblem, workers: jax.Array,
+                   staleness: jax.Array, step_size, w0: jax.Array,
+                   buffer_size: int = 1, h: str = "l2", eval_every: int = 1):
     def one(workers_r, staleness_r, w0_r):
         buf0 = jnp.tile(w0_r[None], (buffer_size, 1))
         (w_final, _, _), trace = _strided_scan(
@@ -280,3 +288,102 @@ def batched_scan_async(prob: EncodedProblem, workers: jax.Array,
         return w_final, trace
 
     return jax.vmap(one)(workers, staleness, w0)
+
+
+@partial(jax.jit, static_argnames=("buffer_size", "h", "eval_every"),
+         donate_argnums=(4,))
+def batched_scan_async(prob: EncodedProblem, workers: jax.Array,
+                       staleness: jax.Array, step_size, w0: jax.Array,
+                       buffer_size: int, h: str = "l2", eval_every: int = 1):
+    """R realizations of async stale-gradient SGD in one compiled program.
+
+    workers/staleness: (R, U) stacked event streams; w0: (R, p) (donated).
+    Returns (w (R, p), trace (R, U // eval_every)).
+    """
+    return _batched_async(prob, workers, staleness, step_size, w0,
+                          buffer_size, h, eval_every)
+
+
+# ---------------------------------------------------------------------------
+# Sharded-trial runners: shard_map over a 'trials' mesh axis (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def trials_device_count(trials: int) -> int:
+    """Devices the 'trials' mesh axis can use for R realizations: every
+    local device when R divides evenly across them, else 1 (= the vmap
+    fallback — sharding cannot help a single device, and a ragged split
+    would need padding that changes the executable shape)."""
+    ndev = len(jax.devices())
+    return ndev if ndev > 1 and trials % ndev == 0 else 1
+
+
+@lru_cache(maxsize=16)
+def _sharded_fn(kind: str, ndev: int, h: str, eval_every: int,
+                buffer_size: int):
+    """One compiled shard_map executable per (runner kind, mesh size,
+    static config).  Each mesh shard runs the plain vmapped body over its
+    R/ndev local realizations — realizations are independent, so there are
+    no collectives and per-realization results match the vmap placement
+    (bitwise in practice; the suite enforces 1e-5)."""
+    mesh = Mesh(np.asarray(jax.devices()[:ndev]), ("trials",))
+    P, Pt = PartitionSpec(), PartitionSpec("trials")
+    if kind == "gd":
+        impl = partial(_batched_gd, h=h, eval_every=eval_every)
+        in_specs = (P, Pt, P, Pt)
+    elif kind == "prox":
+        impl = partial(_batched_prox, eval_every=eval_every)
+        in_specs = (P, Pt, P, Pt)
+    elif kind == "async":
+        impl = partial(_batched_async, buffer_size=buffer_size, h=h,
+                       eval_every=eval_every)
+        in_specs = (P, Pt, Pt, P, Pt)
+    else:
+        raise KeyError(f"unknown sharded runner kind '{kind}'")
+    return jax.jit(shard_map(impl, mesh=mesh, in_specs=in_specs,
+                             out_specs=(Pt, Pt), check_rep=False))
+
+
+def sharded_scan_gd(prob: EncodedProblem, masks: jax.Array, step_size,
+                    w0: jax.Array, h: str = "l2", eval_every: int = 1):
+    """``batched_scan_gd`` with the realization axis sharded across the
+    local device mesh.  Returns (w, trace, ndev); ndev == 1 means the vmap
+    fallback ran (single device, or R not divisible by the device count).
+    """
+    ndev = trials_device_count(masks.shape[0])
+    if ndev == 1:
+        w, tr = batched_scan_gd(prob, masks, step_size, w0, h=h,
+                                eval_every=eval_every)
+        return w, tr, 1
+    fn = _sharded_fn("gd", ndev, h, eval_every, 0)
+    w, tr = fn(prob, masks, jnp.asarray(step_size, jnp.float32), w0)
+    return w, tr, ndev
+
+
+def sharded_scan_prox(prob: EncodedProblem, masks: jax.Array, step_size,
+                      w0: jax.Array, eval_every: int = 1):
+    """``batched_scan_prox`` sharded over the trials mesh axis (see
+    ``sharded_scan_gd``)."""
+    ndev = trials_device_count(masks.shape[0])
+    if ndev == 1:
+        w, tr = batched_scan_prox(prob, masks, step_size, w0,
+                                  eval_every=eval_every)
+        return w, tr, 1
+    fn = _sharded_fn("prox", ndev, "l1", eval_every, 0)
+    w, tr = fn(prob, masks, jnp.asarray(step_size, jnp.float32), w0)
+    return w, tr, ndev
+
+
+def sharded_scan_async(prob: EncodedProblem, workers: jax.Array,
+                       staleness: jax.Array, step_size, w0: jax.Array,
+                       buffer_size: int, h: str = "l2", eval_every: int = 1):
+    """``batched_scan_async`` sharded over the trials mesh axis (see
+    ``sharded_scan_gd``)."""
+    ndev = trials_device_count(workers.shape[0])
+    if ndev == 1:
+        w, tr = batched_scan_async(prob, workers, staleness, step_size, w0,
+                                   buffer_size, h=h, eval_every=eval_every)
+        return w, tr, 1
+    fn = _sharded_fn("async", ndev, h, eval_every, buffer_size)
+    w, tr = fn(prob, workers, staleness, jnp.asarray(step_size, jnp.float32),
+               w0)
+    return w, tr, ndev

@@ -27,12 +27,13 @@ from repro.core.model_parallel import make_lifted_problem, phi_quadratic
 from .engine import ActiveSetPolicy, AsyncTrace, ClusterEngine, FastestK
 from .runners import (batched_scan_async, batched_scan_bcd, batched_scan_gd,
                       batched_scan_prox, scan_async, scan_bcd, scan_gd,
-                      scan_prox)
+                      scan_prox, sharded_scan_async, sharded_scan_gd,
+                      sharded_scan_prox)
 
 __all__ = [
     "ProblemSpec", "RunResult", "TrialsResult", "Strategy",
     "register_strategy", "get_strategy", "available_strategies",
-    "json_safe_meta", "summary_stats", "check_trials",
+    "json_safe_meta", "summary_stats", "check_trials", "resolve_eval_every",
 ]
 
 
@@ -267,19 +268,25 @@ class Strategy:
 
     def run_batched(self, spec: ProblemSpec, engine: ClusterEngine, *,
                     steps: int = 200, trials: int = 1, eval_every: int = 1,
-                    **cfg: Any) -> TrialsResult:
+                    placement: str = "vmap", **cfg: Any) -> TrialsResult:
         """R delay realizations of this cell in one compiled program.
 
         Realization r is bit-identical to ``run(spec, engine.trial(r), ...)``
         up to vmap reduction rounding; ``eval_every=s`` records the
-        objective every s steps (s must divide the schedule length).
-        Fallback for schemes with host-side outer loops: build the problem
-        ONCE, then loop realizations sequentially.
+        objective every s steps (s must divide the schedule length; 0 keeps
+        the final objective only).  ``placement`` decides where the
+        realization axis lives: ``'single'`` (host loop), ``'vmap'`` (one
+        program, one device), ``'sharded'`` (``shard_map`` over the local
+        device mesh, vmap fallback on one device).  This base implementation
+        is the fallback for schemes with host-side outer loops — it builds
+        the problem per realization and loops sequentially, whatever the
+        placement.
         """
         check_trials(steps, trials, eval_every)
+        stride_every = resolve_eval_every(steps, eval_every)
         results = [self.run(spec, engine.trial(r), steps=steps, **dict(cfg))
                    for r in range(trials)]
-        stride = slice(eval_every - 1, None, eval_every)
+        stride = slice(stride_every - 1, None, stride_every)
         return TrialsResult(
             strategy=self.name,
             times=np.stack([np.asarray(r.times) for r in results])[:, stride],
@@ -291,11 +298,27 @@ class Strategy:
 
 
 def check_trials(steps: int, trials: int, eval_every: int) -> None:
+    """Validate a (steps, trials, eval_every) combination up front.
+
+    ``eval_every=0`` is accepted and means "record the final objective
+    only" (callers resolve it to ``steps`` via ``resolve_eval_every``).
+    """
     if trials < 1:
         raise ValueError("trials must be >= 1")
-    if eval_every < 1 or steps % eval_every:
-        raise ValueError(f"eval_every={eval_every} must be a positive "
-                         f"divisor of steps={steps}")
+    if eval_every < 0:
+        raise ValueError(f"eval_every={eval_every} must be >= 0 "
+                         f"(0 = final objective only)")
+    if eval_every and steps % eval_every:
+        raise ValueError(
+            f"eval_every={eval_every} must divide steps={steps} "
+            f"(steps % eval_every == {steps % eval_every}); use "
+            f"eval_every=0 to record the final objective only")
+
+
+def resolve_eval_every(steps: int, eval_every: int) -> int:
+    """The effective record stride: ``eval_every=0`` ("final objective
+    only") becomes a stride of the full schedule length."""
+    return steps if eval_every == 0 else eval_every
 
 
 # ---------------------------------------------------------------------------
@@ -343,10 +366,18 @@ class _SyncGradientStrategy(Strategy):
             schedule=sched)
 
     def run_batched(self, spec, engine, *, steps=200, trials=1, eval_every=1,
-                    **cfg):
-        """R realizations as ONE vmapped scan: encode once, draw the
-        (R, T, m) schedule stack, run the batched runner."""
+                    placement="vmap", **cfg):
+        """R realizations as ONE compiled program: encode once, draw the
+        (R, T, m) schedule stack, run the batched runner — vmapped on one
+        device or ``shard_map``-ped across the trials mesh (``placement=
+        'sharded'``).  ``placement='single'`` takes the sequential host
+        loop instead."""
+        if placement == "single":
+            return Strategy.run_batched(self, spec, engine, steps=steps,
+                                        trials=trials, eval_every=eval_every,
+                                        **cfg)
         check_trials(steps, trials, eval_every)
+        stride_every = resolve_eval_every(steps, eval_every)
         policy = self._policy(engine, cfg)
         enc, prob = self._problem(spec, engine, cfg)
         step_size = cfg.pop("step_size", None) or _auto_step(spec)
@@ -354,22 +385,31 @@ class _SyncGradientStrategy(Strategy):
         w0 = jnp.tile(w0[None], (trials, 1))       # donated by the runner
         batch = engine.sample_schedules(steps, policy, trials)
         masks = jnp.asarray(batch.masks)
-        if spec.h == "l1":
+        meta = {"encoder": enc.name, "beta": enc.beta,
+                "policy": type(policy).__name__, "step_size": step_size,
+                "trials": trials, "eval_every": eval_every,
+                "batched": True,
+                "mean_active": float(batch.masks.sum(-1).mean())}
+        if placement == "sharded":
+            if spec.h == "l1":
+                w, tr, ndev = sharded_scan_prox(prob, masks, step_size, w0,
+                                                eval_every=stride_every)
+            else:
+                w, tr, ndev = sharded_scan_gd(prob, masks, step_size, w0,
+                                              h=spec.h,
+                                              eval_every=stride_every)
+            meta.update(placement="sharded", placement_devices=ndev)
+        elif spec.h == "l1":
             w, tr = batched_scan_prox(prob, masks, step_size, w0,
-                                      eval_every=eval_every)
+                                      eval_every=stride_every)
         else:
             w, tr = batched_scan_gd(prob, masks, step_size, w0, h=spec.h,
-                                    eval_every=eval_every)
+                                    eval_every=stride_every)
         return TrialsResult(
             strategy=self.name,
-            times=batch.times[:, eval_every - 1::eval_every],
+            times=batch.times[:, stride_every - 1::stride_every],
             objective=np.asarray(tr), w=np.asarray(w),
-            meta={"encoder": enc.name, "beta": enc.beta,
-                  "policy": type(policy).__name__, "step_size": step_size,
-                  "trials": trials, "eval_every": eval_every,
-                  "batched": True,
-                  "mean_active": float(batch.masks.sum(-1).mean())},
-            schedules=batch)
+            meta=meta, schedules=batch)
 
 
 @register_strategy("coded-gd")
@@ -432,13 +472,15 @@ class CodedLBFGS(_SyncGradientStrategy):
             schedule=sched)
 
     def run_batched(self, spec, engine, *, steps=200, trials=1, eval_every=1,
-                    **cfg):
+                    placement="vmap", **cfg):
         """The two-loop L-BFGS memory is host state, so realizations run
-        sequentially — but the encode and the schedule stack are built once,
-        and the trace is strided like the fused runners."""
+        sequentially whatever the requested ``placement`` — but the encode
+        and the schedule stack are built once, and the trace is strided
+        like the fused runners."""
         if spec.h != "l2":
             raise ValueError("coded-lbfgs requires the ridge objective")
         check_trials(steps, trials, eval_every)
+        stride_every = resolve_eval_every(steps, eval_every)
         policy = self._policy(engine, cfg)
         enc, prob = self._problem(spec, engine, cfg)
         memory = cfg.pop("memory", 10)
@@ -452,7 +494,7 @@ class CodedLBFGS(_SyncGradientStrategy):
                                       w0=w0)
             ws.append(np.asarray(w))
             trs.append(np.asarray(tr))
-        stride = slice(eval_every - 1, None, eval_every)
+        stride = slice(stride_every - 1, None, stride_every)
         return TrialsResult(
             strategy=self.name, times=batch.times[:, stride],
             objective=np.stack(trs)[:, stride], w=np.stack(ws),
@@ -494,8 +536,13 @@ class CodedBCD(_SyncGradientStrategy):
             schedule=sched)
 
     def run_batched(self, spec, engine, *, steps=200, trials=1, eval_every=1,
-                    **cfg):
+                    placement="vmap", **cfg):
+        if placement == "single":
+            return Strategy.run_batched(self, spec, engine, steps=steps,
+                                        trials=trials, eval_every=eval_every,
+                                        **cfg)
         check_trials(steps, trials, eval_every)
+        stride_every = resolve_eval_every(steps, eval_every)
         policy = self._policy(engine, cfg)
         enc = _resolve_encoder(cfg.pop("encoder", "hadamard"), spec.p,
                                beta=cfg.pop("beta", 2.0),
@@ -507,17 +554,23 @@ class CodedBCD(_SyncGradientStrategy):
         batch = engine.sample_schedules(steps, policy, trials)
         v0 = jnp.zeros((trials, engine.m, prob.XS.shape[-1]), jnp.float32)
         v, tr = batched_scan_bcd(prob, jnp.asarray(batch.masks), step_size,
-                                 v0, eval_every=eval_every)
+                                 v0, eval_every=stride_every)
+        meta = {"encoder": enc.name, "beta": enc.beta,
+                "objective": "phi(Xw) (unregularized, exact-optimum family)",
+                "step_size": step_size, "trials": trials,
+                "eval_every": eval_every, "batched": True}
+        if placement == "sharded":
+            # the lifted problem carries host phi callables, which shard_map
+            # cannot partition — realizations stay vmapped on one device
+            meta.update(placement="vmap",
+                        placement_fallback="sharded unsupported for the "
+                                           "lifted BCD problem")
         # batched bcd traces are post-commit (== scan_bcd's tr[1:] at s=1)
         return TrialsResult(
             strategy=self.name,
-            times=batch.times[:, eval_every - 1::eval_every],
+            times=batch.times[:, stride_every - 1::stride_every],
             objective=np.asarray(tr), w=np.asarray(v),
-            meta={"encoder": enc.name, "beta": enc.beta,
-                  "objective": "phi(Xw) (unregularized, exact-optimum family)",
-                  "step_size": step_size, "trials": trials,
-                  "eval_every": eval_every, "batched": True},
-            schedules=batch)
+            meta=meta, schedules=batch)
 
 
 # ---------------------------------------------------------------------------
@@ -560,31 +613,54 @@ class AsyncSGD(Strategy):
             schedule=trace)
 
     def run_batched(self, spec, engine, *, steps=200, trials=1, eval_every=1,
-                    **cfg):
+                    placement="vmap", **cfg):
         if spec.h == "l1":
             raise ValueError("async baseline covers smooth objectives only")
         m = engine.m
         bound = int(cfg.pop("staleness_bound", 2 * m))
         updates = int(cfg.pop("updates", steps * m))
         check_trials(updates, trials, eval_every)
+        stride_every = resolve_eval_every(updates, eval_every)
+        if placement == "single":
+            results = [self.run(spec, engine.trial(r), steps=steps,
+                                staleness_bound=bound, updates=updates,
+                                **dict(cfg))
+                       for r in range(trials)]
+            stride = slice(stride_every - 1, None, stride_every)
+            return TrialsResult(
+                strategy=self.name,
+                times=np.stack([np.asarray(r.times)
+                                for r in results])[:, stride],
+                objective=np.stack([np.asarray(r.objective)
+                                    for r in results])[:, stride],
+                w=np.stack([np.asarray(r.w) for r in results]),
+                meta={**results[0].meta, "trials": trials,
+                      "eval_every": eval_every, "batched": False})
         step_size = (cfg.pop("step_size", None) or _auto_step(spec)) / m
         enc = make_encoder("uncoded", spec.n, beta=1.0).with_workers(m)
         prob = make_encoded_problem(spec.X, spec.y, enc, m, lam=spec.lam)
         batch = engine.sample_asyncs(updates, bound, trials)
         w0 = jnp.asarray(cfg.pop("w0", np.zeros(spec.p)), jnp.float32)
         w0 = jnp.tile(w0[None], (trials, 1))       # donated by the runner
-        w, tr = batched_scan_async(
-            prob, jnp.asarray(batch.workers), jnp.asarray(batch.staleness),
-            step_size, w0, buffer_size=bound + 1, h=spec.h,
-            eval_every=eval_every)
+        meta = {"staleness_bound": bound, "updates": updates,
+                "dropped": [int(d) for d in batch.dropped],
+                "mean_staleness": float(batch.staleness.mean()),
+                "max_staleness": int(batch.staleness.max()),
+                "step_size": step_size, "trials": trials,
+                "eval_every": eval_every, "batched": True}
+        if placement == "sharded":
+            w, tr, ndev = sharded_scan_async(
+                prob, jnp.asarray(batch.workers),
+                jnp.asarray(batch.staleness), step_size, w0,
+                buffer_size=bound + 1, h=spec.h, eval_every=stride_every)
+            meta.update(placement="sharded", placement_devices=ndev)
+        else:
+            w, tr = batched_scan_async(
+                prob, jnp.asarray(batch.workers),
+                jnp.asarray(batch.staleness), step_size, w0,
+                buffer_size=bound + 1, h=spec.h, eval_every=stride_every)
         return TrialsResult(
             strategy=self.name,
-            times=batch.times[:, eval_every - 1::eval_every],
+            times=batch.times[:, stride_every - 1::stride_every],
             objective=np.asarray(tr), w=np.asarray(w),
-            meta={"staleness_bound": bound, "updates": updates,
-                  "dropped": [int(d) for d in batch.dropped],
-                  "mean_staleness": float(batch.staleness.mean()),
-                  "max_staleness": int(batch.staleness.max()),
-                  "step_size": step_size, "trials": trials,
-                  "eval_every": eval_every, "batched": True},
-            schedules=batch)
+            meta=meta, schedules=batch)

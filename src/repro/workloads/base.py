@@ -250,6 +250,17 @@ class Workload:
         return ClusterEngine(make_delay_model(delay or ps.delay), ps.m,
                              seed=ps.seed if seed is None else seed)
 
+    def skip_reason(self, strategy: str) -> str | None:
+        """The skip-with-reason message this workload would raise for
+        ``strategy``, or None when the cell can run — lets planners
+        (``repro.experiments.plan``) materialize skip cells up front with
+        the exact message the record will carry."""
+        try:
+            self._resolve_checked(strategy)
+        except UnsupportedStrategy as e:
+            return str(e)
+        return None
+
     def _resolve_checked(self, strategy: str) -> str:
         """Resolve the 'coded' alias and raise ``UnsupportedStrategy`` for
         unknown / unsupported strategies (shared by run and run_trials)."""
@@ -288,6 +299,7 @@ class Workload:
     def run_trials(self, strategy: str, engine: ClusterEngine | None = None,
                    *, preset: str | Preset = "smoke", data: Any = None,
                    trials: int = 1, eval_every: int = 1,
+                   placement: str = "vmap",
                    **cfg) -> list[WorkloadRunResult]:
         """``trials`` delay realizations of one cell (paper §5 Monte-Carlo
         protocol), one scored result per realization.
@@ -295,11 +307,13 @@ class Workload:
         The default drives ``run`` once per realization on
         ``engine.trial(r)`` — correct for every workload, including the
         chunked/ALS lowerings whose multi-dispatch structure cannot be
-        vmapped.  Workloads whose lowering is a single strategy run (ridge)
-        override this with the fused ``Strategy.run_batched`` path, where
-        the whole realization stack is one compiled program.  ``eval_every``
-        is honored by the batched overrides; this sequential fallback
-        records at full per-step resolution.
+        vmapped (so ``placement`` is effectively ``'single'`` here whatever
+        was requested).  Workloads whose lowering is a single strategy run
+        (ridge) override this with the fused ``Strategy.run_batched`` path,
+        where the whole realization stack is one compiled program, placed
+        per ``placement`` (single / vmap / sharded).  ``eval_every`` is
+        honored by the batched overrides; this sequential fallback records
+        at full per-step resolution.
         """
         strategy = self._resolve_checked(strategy)
         ps = self.preset(preset)

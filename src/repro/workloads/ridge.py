@@ -96,11 +96,12 @@ class Ridge(Workload):
         return self._score(strategy, ps, data, result)
 
     def run_trials(self, strategy, engine=None, *, preset="smoke", data=None,
-                   trials=1, eval_every=1, **cfg):
+                   trials=1, eval_every=1, placement="vmap", **cfg):
         """Fused Monte-Carlo path: ridge lowers to ONE strategy run, so the
         whole realization stack executes as a single compiled program via
         ``Strategy.run_batched`` (one encode, one (R, T, m) schedule draw,
-        one vmapped scan) and each realization is scored independently."""
+        one vmapped — or ``placement='sharded'``, shard_map-ped — scan) and
+        each realization is scored independently."""
         strategy = self._resolve_checked(strategy)
         ps = self.preset(preset)
         if engine is None:
@@ -110,6 +111,6 @@ class Ridge(Workload):
         steps, cfg = self._cell_cfg(strategy, ps, dict(cfg))
         batched = get_strategy(strategy).run_batched(
             data.spec, engine, steps=steps, trials=trials,
-            eval_every=eval_every, **cfg)
+            eval_every=eval_every, placement=placement, **cfg)
         return [self._score(strategy, ps, data, batched.realization(r))
                 for r in range(trials)]

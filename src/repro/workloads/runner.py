@@ -1,11 +1,11 @@
-"""Experiment runner: workload x strategy (x delay) matrix -> JSON traces.
+"""Workload experiment runner CLI — legacy front-end (DESIGN.md §10).
 
-The paper's §5 evaluation protocol as one command: every requested workload
-is built once per preset, every requested strategy runs on the SAME dataset
-under the same cluster (shared engine seed -> comparable wall-clock), and
-each cell emits its wall-clock-vs-paper-metric trace.  Strategies that
-cannot express a workload become skip-with-reason records instead of
-aborting the matrix.
+Historically this module owned the workload x strategy (x delay) cell loop;
+it is now a thin shim that compiles its (unchanged) flags into a
+``repro.experiments.ExperimentSpec`` and delegates to the unified ``plan ->
+execute`` path.  Records, JSON and summary-CSV outputs are identical to
+what this harness always produced; new code should use ``python -m
+repro.experiments.run`` or the ``repro.experiments`` API directly.
 
     PYTHONPATH=src python -m repro.workloads.run \\
         --workload mf --preset smoke \\
@@ -18,57 +18,17 @@ Outputs: ``<out>/workloads.json`` (full traces) and ``<out>/summary.csv``.
 from __future__ import annotations
 
 import argparse
-import csv
-import json
 import os
 from typing import Sequence
 
-import numpy as np
-
-from repro.runtime.engine import ClusterEngine, make_delay_model
-from repro.runtime.strategies import (check_trials, json_safe_meta,
-                                      summary_stats)
-
-from .base import (UnsupportedStrategy, WorkloadRunResult,
-                   available_workloads, get_workload)
+from repro.experiments import (DelayAxis, ExperimentSpec, PlacementAxis,
+                               ProblemAxis, StrategyAxis, TrialsAxis,
+                               execute, plan, print_table, trials_record,
+                               write_json, write_summary_csv)
+from repro.workloads.base import available_workloads
 
 __all__ = ["run_workload_matrix", "trials_record", "write_json",
            "write_summary_csv", "main"]
-
-
-def trials_record(results: "list[WorkloadRunResult]", *,
-                  delay: str, seed: int) -> dict:
-    """Aggregate R per-realization workload results into ONE JSON record:
-    stacked per-realization traces plus mean/p50/p95 wall-clock and metric
-    summaries.  Scalar ``final_metric`` / ``final_objective`` /
-    ``wallclock_s`` are across-trial means, so batched records drop into
-    every single-trial consumer (summary CSV, tables)."""
-    r0 = results[0]
-    final_metric = [r.final_metric for r in results]
-    final_obj = [r.final_objective for r in results]
-    wallclock = [r.wallclock for r in results]
-    return {
-        "workload": r0.workload, "strategy": r0.strategy,
-        "preset": r0.preset, "metric_name": r0.metric_name,
-        "delay": delay, "seed": seed, "trials": len(results),
-        "final_metric": float(np.mean(final_metric)),
-        "final_objective": float(np.mean(final_obj)),
-        "wallclock_s": float(np.mean(wallclock)),
-        "summary": {"trials": len(results),
-                    "wallclock_s": summary_stats(wallclock),
-                    "final_metric": summary_stats(final_metric),
-                    "final_objective": summary_stats(final_obj)},
-        "times": [np.asarray(r.times, dtype=float).tolist()
-                  for r in results],
-        "objective": [np.asarray(r.objective, dtype=float).tolist()
-                      for r in results],
-        "metric_times": [np.asarray(r.metric_times, dtype=float).tolist()
-                         for r in results],
-        "metric": [np.asarray(r.metric, dtype=float).tolist()
-                   for r in results],
-        "extras": [r.extras for r in results],
-        "meta": json_safe_meta(r0.meta),
-    }
 
 
 def run_workload_matrix(workloads: Sequence[str], strategies: Sequence[str],
@@ -76,95 +36,39 @@ def run_workload_matrix(workloads: Sequence[str], strategies: Sequence[str],
                         delays: Sequence[str] | None = None, seed: int = 0,
                         m: int | None = None, compute_time: float = 0.05,
                         trials: int = 1, eval_every: int = 1,
-                        **cfg) -> list[dict]:
+                        placement: str = "vmap", **cfg) -> list[dict]:
     """Run every (workload, delay, strategy) cell; returns one record each.
 
-    ``delays=None`` uses each workload's native paper delay model; ``m``
-    overrides the preset's worker count.  Extra ``cfg`` (k=, encoder=,
-    steps=, ...) is forwarded to every cell.
-
-    ``trials=R`` runs R delay realizations per cell (``Workload.run_trials``
-    — a single compiled program where the lowering allows, sequential
-    trial-seeded runs elsewhere); the cell's record then stacks the
-    per-realization traces and carries mean/p50/p95 summaries.
+    Legacy API shim over ``repro.experiments``: ``delays=None`` uses each
+    workload's native paper delay model, ``m`` overrides the preset's
+    worker count, and extra ``cfg`` (``k=``, ``encoder=``, ``steps=``, and
+    any strategy kwargs) is forwarded to every cell.  ``trials=R`` stacks R
+    delay realizations per cell (fused into one compiled program where the
+    lowering allows, with ``placement`` choosing single/vmap/sharded
+    execution) and the record carries mean/p50/p95 summaries.
     """
-    records = []
-    for wl_name in workloads:
-        wl = get_workload(wl_name)
-        ps = wl.preset(preset)
-        # a bad trials/eval_every combination is a harness misconfiguration
-        # — abort up front rather than emit a matrix of skipped cells
-        check_trials(cfg.get("steps", ps.steps), trials, eval_every)
-        data = wl.build(ps)
-        for delay in (delays or [ps.delay]):
-            engine = ClusterEngine(make_delay_model(delay),
-                                   ps.m if m is None else m,
-                                   compute_time=compute_time, seed=seed)
-            for strat in strategies:
-                resolved = wl.resolve_strategy(strat)
-                base = {"workload": wl.name, "strategy": resolved,
-                        "delay": delay, "preset": ps.name, "seed": seed}
-                cell_cfg = dict(cfg)
-                if not resolved.startswith("coded"):
-                    # --encoder targets the coded scheme; uncoded/replication
-                    # keep their defining encoders.
-                    cell_cfg.pop("encoder", None)
-                try:
-                    if trials > 1:
-                        results = wl.run_trials(strat, engine, preset=ps,
-                                                data=data, trials=trials,
-                                                eval_every=eval_every,
-                                                **cell_cfg)
-                        records.append({**base,
-                                        **trials_record(results, delay=delay,
-                                                        seed=seed)})
-                        continue
-                    result = wl.run(strat, engine, preset=ps, data=data,
-                                    **cell_cfg)
-                except ValueError as e:
-                    # UnsupportedStrategy, or a config clash (e.g. --m below
-                    # the preset's k) — record the reason, keep the matrix
-                    # going (same contract as the plain compare path)
-                    if not isinstance(e, UnsupportedStrategy):
-                        print(f"# skipping {resolved} x {delay}: {e}")
-                    records.append({**base, "skipped": str(e),
-                                    "metric_name": wl.metric_name})
-                    continue
-                rec = result.to_record()
-                rec.update(delay=delay, seed=seed)
-                records.append(rec)
-    return records
-
-
-def write_json(records: list[dict], path: str) -> None:
-    with open(path, "w") as f:
-        json.dump(records, f, indent=1)
-
-
-def write_summary_csv(records: list[dict], path: str) -> None:
-    """One row per cell: the paper-table view (final metric + wall-clock)."""
-    with open(path, "w", newline="") as f:
-        w = csv.writer(f)
-        w.writerow(["workload", "strategy", "delay", "preset", "metric_name",
-                    "final_metric", "final_objective", "wallclock_s",
-                    "skipped"])
-        for r in records:
-            if "skipped" in r:
-                w.writerow([r["workload"], r["strategy"], r["delay"],
-                            r["preset"], r.get("metric_name", ""), "", "", "",
-                            r["skipped"]])
-            else:
-                w.writerow([r["workload"], r["strategy"], r["delay"],
-                            r["preset"], r["metric_name"],
-                            f"{r['final_metric']:.6g}",
-                            f"{r['final_objective']:.6g}",
-                            f"{r['wallclock_s']:.2f}", ""])
+    cfg = dict(cfg)
+    k = cfg.pop("k", None)
+    steps = cfg.pop("steps", None)
+    encoder = cfg.pop("encoder", None)
+    spec = ExperimentSpec(
+        problems=tuple(ProblemAxis.from_workload(w, preset)
+                       for w in workloads),
+        strategies=tuple(StrategyAxis(name=s, encoder=encoder, k=k,
+                                      options=tuple(cfg.items()))
+                         for s in strategies),
+        delays=DelayAxis(delays=tuple(delays or ()), m=m,
+                         compute_time=compute_time),
+        trials=TrialsAxis(trials=trials, eval_every=eval_every, seed=seed),
+        placement=PlacementAxis(mode=placement), steps=steps)
+    return execute(plan(spec)).records
 
 
 def main(argv: Sequence[str] | None = None) -> list[dict]:
     ap = argparse.ArgumentParser(
         prog="repro.workloads.run",
-        description="paper-§5 workload zoo experiment runner")
+        description="paper-§5 workload zoo experiment runner (legacy "
+                    "front-end over repro.experiments)")
     ap.add_argument("--workload", default="all",
                     help=f"comma list from {available_workloads()}, or 'all'")
     ap.add_argument("--preset", default="smoke",
@@ -185,7 +89,11 @@ def main(argv: Sequence[str] | None = None) -> list[dict]:
                          "where the lowering allows; records carry "
                          "per-realization traces + mean/p50/p95 summaries)")
     ap.add_argument("--eval-every", type=int, default=1,
-                    help="record stride inside batched runs")
+                    help="record stride inside batched runs (0 = final "
+                         "objective only)")
+    ap.add_argument("--placement", default="vmap",
+                    choices=["single", "vmap", "sharded"],
+                    help="how the realization axis executes (with --trials)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="runs/workloads")
     ap.add_argument("--formats", default="json,csv")
@@ -207,7 +115,8 @@ def main(argv: Sequence[str] | None = None) -> list[dict]:
     records = run_workload_matrix(workloads, strategies, preset=args.preset,
                                   delays=delays, seed=args.seed,
                                   trials=args.trials,
-                                  eval_every=args.eval_every, **cfg)
+                                  eval_every=args.eval_every,
+                                  placement=args.placement, **cfg)
 
     os.makedirs(args.out, exist_ok=True)
     formats = {f.strip() for f in args.formats.split(",")}
@@ -215,17 +124,7 @@ def main(argv: Sequence[str] | None = None) -> list[dict]:
         write_json(records, os.path.join(args.out, "workloads.json"))
     if "csv" in formats:
         write_summary_csv(records, os.path.join(args.out, "summary.csv"))
-
-    print(f"{'workload':10s} {'strategy':14s} {'delay':12s} "
-          f"{'metric':>12s} {'final':>10s} {'wallclock_s':>12s}")
-    for r in records:
-        if "skipped" in r:
-            print(f"{r['workload']:10s} {r['strategy']:14s} "
-                  f"{r['delay']:12s} {'skipped:':>12s} {r['skipped']}")
-        else:
-            print(f"{r['workload']:10s} {r['strategy']:14s} "
-                  f"{r['delay']:12s} {r['metric_name']:>12s} "
-                  f"{r['final_metric']:10.4g} {r['wallclock_s']:12.2f}")
+    print_table(records)
     print(f"wrote {sorted(formats)} to {args.out}/")
     return records
 
