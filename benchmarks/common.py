@@ -1,34 +1,17 @@
-"""Shared benchmark utilities: timing + CSV emission + scheme definitions."""
+"""Shared benchmark utilities: timing + CSV emission + scheme definitions.
+
+The timing/blocking helpers live in :mod:`repro.obs.timing` (the ONE
+clock/blocking discipline, DESIGN.md §11); this module re-exports them so
+every ``benchmarks/bench_*.py`` keeps its historical import path.
+"""
 from __future__ import annotations
 
-import time
+from repro.obs.timing import block, emit, time_us
 
-import numpy as np
+# historical alias — bench scripts (and out-of-tree users) call _block
+_block = block
 
-
-def _block(out):
-    """block_until_ready on jax outputs; no-op for host values."""
-    try:
-        import jax
-        return jax.block_until_ready(out)
-    except Exception:
-        return out
-
-
-def time_us(fn, *args, iters: int = 5, warmup: int = 1, **kw) -> float:
-    """Mean microseconds per call; blocks on device outputs INSIDE the timed
-    loop (blocking only after the final call lets earlier dispatches overlap
-    and under-reports per-iteration time)."""
-    for _ in range(warmup):
-        _block(fn(*args, **kw))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        _block(fn(*args, **kw))
-    return (time.perf_counter() - t0) / iters * 1e6
-
-
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
-    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+__all__ = ["block", "_block", "time_us", "emit", "masks_from_delays"]
 
 
 def masks_from_delays(model, m, k, steps, seed=0):

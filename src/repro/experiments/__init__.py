@@ -21,18 +21,19 @@ CLI:  PYTHONPATH=src python -m repro.experiments.run \\
 The legacy ``runtime.compare`` and ``workloads.run`` CLIs are thin
 front-ends over this path (see DESIGN.md §10 for the migration table).
 """
-from .execute import (CellOutcome, ExperimentResult, execute,
+from .execute import (CellOutcome, ExperimentResult, cell_label, execute,
                       resolve_policy, run, trials_record)
-from .io import (print_table, trace_rows, write_json, write_summary_csv,
-                 write_trace_csv)
+from .io import (print_table, trace_rows, write_json, write_metrics_csv,
+                 write_summary_csv, write_trace_csv)
 from .plan import ExperimentPlan, PlannedCell, plan
-from .spec import (PLACEMENTS, DelayAxis, ExperimentSpec, PlacementAxis,
-                   ProblemAxis, StrategyAxis, TrialsAxis)
+from .spec import (PLACEMENTS, DelayAxis, ExperimentSpec, ObsAxis,
+                   PlacementAxis, ProblemAxis, StrategyAxis, TrialsAxis)
 
 __all__ = [
     "PLACEMENTS", "ProblemAxis", "StrategyAxis", "DelayAxis", "TrialsAxis",
-    "PlacementAxis", "ExperimentSpec", "PlannedCell", "ExperimentPlan",
-    "plan", "CellOutcome", "ExperimentResult", "execute", "run",
-    "resolve_policy", "trials_record", "write_json", "write_trace_csv",
-    "write_summary_csv", "trace_rows", "print_table",
+    "PlacementAxis", "ObsAxis", "ExperimentSpec", "PlannedCell",
+    "ExperimentPlan", "plan", "CellOutcome", "ExperimentResult", "execute",
+    "run", "resolve_policy", "trials_record", "cell_label", "write_json",
+    "write_trace_csv", "write_summary_csv", "write_metrics_csv",
+    "trace_rows", "print_table",
 ]

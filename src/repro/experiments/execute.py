@@ -25,17 +25,20 @@ record carries the core keys, workload records add theirs):
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import os
 from typing import Any
 
 import numpy as np
 
-from .io import print_table, write_json, write_summary_csv, write_trace_csv
+from .io import (print_table, write_json, write_metrics_csv,
+                 write_summary_csv, write_trace_csv)
 from .plan import ExperimentPlan, PlannedCell
-from .spec import ExperimentSpec
+from .spec import ExperimentSpec, ObsAxis
 
 __all__ = ["CellOutcome", "ExperimentResult", "execute", "run",
-           "resolve_policy", "trials_record"]
+           "resolve_policy", "trials_record", "cell_label"]
 
 
 def resolve_policy(name: str, m: int, k: int, *, deadline: float = 1.0,
@@ -103,9 +106,12 @@ class CellOutcome:
 
 @dataclasses.dataclass
 class ExperimentResult:
-    """Everything ``execute`` produced, with the shared writers attached."""
+    """Everything ``execute`` produced, with the shared writers attached.
+    ``recorder`` is the run's :class:`repro.obs.TraceRecorder` when the
+    spec's :class:`ObsAxis` was enabled, else None."""
     plan: ExperimentPlan
     outcomes: list
+    recorder: Any = None
 
     @property
     def spec(self) -> ExperimentSpec:
@@ -127,13 +133,74 @@ class ExperimentResult:
     def print_table(self) -> None:
         print_table(self.records)
 
+    def to_metrics_csv(self, path: str) -> None:
+        write_metrics_csv(self.records, path)
+
+
+def cell_label(cell: PlannedCell) -> str:
+    """The stable human-readable id obs events carry for one cell."""
+    prefix = (f"{cell.problem.workload}/"
+              if cell.kind == "workload" else "")
+    return f"{prefix}{cell.resolved_strategy}x{cell.delay}"
+
 
 def execute(plan: ExperimentPlan) -> ExperimentResult:
     """Run every planned cell; never aborts mid-matrix for per-cell
-    incompatibilities (those become skip-with-reason records)."""
+    incompatibilities (those become skip-with-reason records).
+
+    When the spec carries an enabled :class:`ObsAxis`, the whole matrix runs
+    under an active :class:`repro.obs.TraceRecorder`: every record gains
+    ``host_s``/``compile_s``/``execute_s``/``compiles`` (the CompileWatch
+    split) plus an ``obs`` per-cell metrics summary, and ``obs.trace`` /
+    ``obs.profile`` write the trace / profiler artifacts.  With the axis
+    off (the default) records are bit-identical to pre-obs builds.
+    """
+    obs = getattr(plan.spec, "obs", None)
+    if obs is None or not obs.enabled:
+        caches: dict = {}
+        outcomes = [_execute_cell(cell, caches) for cell in plan.cells]
+        return ExperimentResult(plan=plan, outcomes=outcomes)
+    return _execute_observed(plan, obs)
+
+
+def _execute_observed(plan: ExperimentPlan, obs: ObsAxis) -> ExperimentResult:
+    from repro.obs import (CompileWatch, TraceRecorder, cell_summary,
+                           memory_high_water, profile_region)
+    rec = TraceRecorder(meta={"cells": len(plan.cells),
+                              "trials": plan.spec.trials.trials,
+                              "placement": plan.spec.placement.mode})
     caches: dict = {}
-    outcomes = [_execute_cell(cell, caches) for cell in plan.cells]
-    return ExperimentResult(plan=plan, outcomes=outcomes)
+    outcomes: list = []
+    with rec.activate():
+        for cell in plan.cells:
+            label = cell_label(cell)
+            mark = rec.checkpoint()
+            prof = (profile_region(os.path.join(obs.profile,
+                                                f"cell{cell.index:03d}"))
+                    if obs.profile and cell.skip is None
+                    else contextlib.nullcontext())
+            with rec.cell(label), prof, CompileWatch() as cw:
+                outcome = _execute_cell(cell, caches)
+            if not outcome.skipped:
+                summary = cell_summary(rec.sources_since(mark))
+                if obs.profile:
+                    hwm = memory_high_water()
+                    if hwm is not None:
+                        summary["memory_high_water_bytes"] = int(hwm)
+                outcome.record.update(
+                    host_s=cw.total_s, compile_s=cw.compile_s,
+                    execute_s=cw.execute_s, compiles=cw.compiles,
+                    obs=summary)
+            outcomes.append(outcome)
+    if obs.trace:
+        prefix = obs.trace[:-len(".jsonl")] \
+            if obs.trace.endswith(".jsonl") else obs.trace
+        d = os.path.dirname(prefix)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        rec.to_jsonl(prefix + ".jsonl")
+        rec.to_perfetto(prefix + ".perfetto.json")
+    return ExperimentResult(plan=plan, outcomes=outcomes, recorder=rec)
 
 
 def run(spec: ExperimentSpec) -> ExperimentResult:

@@ -7,7 +7,10 @@ writers:
   * :func:`write_json`        — the full per-cell records, traces included;
   * :func:`write_trace_csv`   — long format, one row per recorded
     (workload, strategy, delay, trial, step) point;
-  * :func:`write_summary_csv` — one row per cell: the paper-table view.
+  * :func:`write_summary_csv` — one row per cell: the paper-table view;
+  * :func:`write_metrics_csv` — one row per cell: the obs view (compile /
+    execute split, miss-rate, active-set, latency percentiles, staleness),
+    from records produced with the spec's :class:`ObsAxis` enabled.
 
 ``runtime/compare.py`` and ``workloads/runner.py`` import these instead of
 carrying their own copies.
@@ -18,7 +21,7 @@ import csv
 import json
 
 __all__ = ["write_json", "trace_rows", "write_trace_csv",
-           "write_summary_csv", "print_table"]
+           "write_summary_csv", "write_metrics_csv", "print_table"]
 
 
 def write_json(records: list[dict], path: str) -> None:
@@ -85,6 +88,56 @@ def write_summary_csv(records: list[dict], path: str) -> None:
                             f"{r['final_metric']:.6g}",
                             f"{r['final_objective']:.6g}",
                             f"{r['wallclock_s']:.2f}", ""])
+
+
+METRICS_COLUMNS = [
+    "workload", "strategy", "delay", "trials",
+    "host_s", "compile_s", "execute_s", "compiles",
+    "mean_miss_rate", "max_miss_rate",
+    "active_size_mean", "active_size_min", "active_size_max",
+    "step_latency_p50", "step_latency_p95", "step_latency_p99",
+    "staleness_mean", "staleness_max", "staleness_clamped", "dropped",
+    "skipped",
+]
+
+
+def _fmt(v, spec: str = ".6g") -> str:
+    return "" if v is None else format(v, spec)
+
+
+def write_metrics_csv(records: list[dict], path: str) -> None:
+    """One row per cell: the straggler/compile metrics attached by
+    ``execute`` under an enabled :class:`ObsAxis` (records without the
+    ``obs`` key — e.g. from a no-obs run — produce mostly-empty rows)."""
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(METRICS_COLUMNS)
+        for r in records:
+            if "skipped" in r:
+                w.writerow([r.get("workload", ""), r["strategy"],
+                            r["delay"]] + [""] * 17 + [r["skipped"]])
+                continue
+            obs = r.get("obs", {})
+            sched = obs.get("schedule", {})
+            asy = obs.get("async", {})
+            active = sched.get("active_size", {})
+            lat = sched.get("step_latency_s", {})
+            stale = asy.get("staleness", {})
+            w.writerow([
+                r.get("workload", ""), r["strategy"], r["delay"],
+                r.get("trials", 1),
+                _fmt(r.get("host_s")), _fmt(r.get("compile_s")),
+                _fmt(r.get("execute_s")), _fmt(r.get("compiles"), "d"),
+                _fmt(sched.get("mean_miss_rate")),
+                _fmt(sched.get("max_miss_rate")),
+                _fmt(active.get("mean")), _fmt(active.get("min")),
+                _fmt(active.get("max")),
+                _fmt(lat.get("p50")), _fmt(lat.get("p95")),
+                _fmt(lat.get("p99")),
+                _fmt(stale.get("mean")), _fmt(stale.get("max")),
+                _fmt(asy.get("staleness_clamped"), "d"),
+                _fmt(asy.get("dropped"), "d"), "",
+            ])
 
 
 def print_table(records: list[dict]) -> None:

@@ -25,8 +25,8 @@ from typing import Sequence
 
 from .execute import ExperimentResult, execute
 from .plan import plan
-from .spec import (DelayAxis, ExperimentSpec, PlacementAxis, ProblemAxis,
-                   StrategyAxis, TrialsAxis)
+from .spec import (DelayAxis, ExperimentSpec, ObsAxis, PlacementAxis,
+                   ProblemAxis, StrategyAxis, TrialsAxis)
 
 __all__ = ["build_spec", "main"]
 
@@ -54,6 +54,12 @@ def build_spec(args: argparse.Namespace) -> ExperimentSpec:
                      staleness_bound=args.staleness_bound,
                      async_updates=args.async_updates)
         for s in _csv_list(args.strategies))
+    # the legacy front-ends share build_spec but not the obs flags, hence
+    # getattr defaults — their specs get the all-off ObsAxis
+    obs = ObsAxis(trace=getattr(args, "trace", None),
+                  profile=getattr(args, "profile", None),
+                  metrics=bool(getattr(args, "metrics_out", None)
+                               or getattr(args, "metrics", False)))
     return ExperimentSpec(
         problems=problems, strategies=strategies,
         delays=DelayAxis(delays=delays, m=args.m,
@@ -61,7 +67,7 @@ def build_spec(args: argparse.Namespace) -> ExperimentSpec:
         trials=TrialsAxis(trials=args.trials, eval_every=args.eval_every,
                           seed=args.seed),
         placement=PlacementAxis(mode=args.placement),
-        steps=args.steps)
+        steps=args.steps, obs=obs)
 
 
 def add_axis_flags(ap: argparse.ArgumentParser, *,
@@ -138,6 +144,17 @@ def main(argv: Sequence[str] | None = None) -> ExperimentResult:
                     help="print the resolved cell list and exit")
     ap.add_argument("--out", default="runs/experiments")
     ap.add_argument("--formats", default="json,csv,summary")
+    ap.add_argument("--trace", default=None, metavar="PREFIX",
+                    help="write <PREFIX>.jsonl + <PREFIX>.perfetto.json "
+                         "straggler traces (view with repro.obs.report / "
+                         "ui.perfetto.dev)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace per cell under DIR "
+                         "plus device-memory high-water marks")
+    ap.add_argument("--metrics-out", default=None, metavar="CSV",
+                    help="write the per-cell obs metrics CSV (miss-rate, "
+                         "active-set, latency percentiles, compile vs "
+                         "execute split)")
     args = ap.parse_args(argv)
 
     spec = build_spec(args)
@@ -155,6 +172,15 @@ def main(argv: Sequence[str] | None = None) -> ExperimentResult:
         result.to_csv(os.path.join(args.out, "experiments.csv"))
     if "summary" in formats:
         result.to_summary_csv(os.path.join(args.out, "summary.csv"))
+    if args.metrics_out:
+        d = os.path.dirname(args.metrics_out)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        result.to_metrics_csv(args.metrics_out)
+        print(f"wrote obs metrics to {args.metrics_out}")
+    if args.trace:
+        print(f"wrote obs trace to {args.trace}.jsonl / "
+              f"{args.trace}.perfetto.json")
     result.print_table()
     print(f"wrote {sorted(formats)} to {args.out}/")
     return result

@@ -26,7 +26,7 @@ from typing import Any
 
 __all__ = [
     "ProblemAxis", "StrategyAxis", "DelayAxis", "TrialsAxis",
-    "PlacementAxis", "ExperimentSpec", "PLACEMENTS",
+    "PlacementAxis", "ObsAxis", "ExperimentSpec", "PLACEMENTS",
 ]
 
 
@@ -161,6 +161,37 @@ class PlacementAxis:
 
 
 @dataclasses.dataclass(frozen=True)
+class ObsAxis:
+    """The observability axis (DESIGN.md §11): what ``execute`` records
+    about HOW the matrix ran, on top of what it computed.
+
+    All fields default off, and the default path is bit-identical to a run
+    without the axis — records only grow ``host_s``/``compile_s``/
+    ``execute_s``/``obs`` keys when ``enabled``, so legacy comparisons
+    (execute == compare/workloads.run) stay exact.
+
+    * ``trace``   — path prefix; write ``<trace>.jsonl`` (the canonical
+      event stream) and ``<trace>.perfetto.json`` (Chrome/Perfetto
+      ``trace_event`` view) after the matrix;
+    * ``profile`` — directory; capture a ``jax.profiler`` trace per cell
+      under ``<profile>/<cell>/`` plus device-memory high-water marks;
+    * ``metrics`` — attach per-cell straggler metrics (miss-rate,
+      active-set distribution, staleness histogram, latency percentiles)
+      and the compile/execute split to every record.
+
+    ``trace``/``profile`` imply ``metrics``-grade recording: any enabled
+    field activates the :class:`repro.obs.TraceRecorder` for the run.
+    """
+    trace: str | None = None
+    profile: str | None = None
+    metrics: bool = False
+
+    @property
+    def enabled(self) -> bool:
+        return bool(self.trace or self.profile or self.metrics)
+
+
+@dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
     """The full declarative experiment: problems x strategies x delays,
     run for R realizations under one placement.
@@ -175,6 +206,7 @@ class ExperimentSpec:
     trials: TrialsAxis = TrialsAxis()
     placement: PlacementAxis = PlacementAxis()
     steps: int | None = None
+    obs: ObsAxis = ObsAxis()
 
     def validate(self) -> None:
         if not self.problems:

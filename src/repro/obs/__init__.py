@@ -1,0 +1,36 @@
+"""repro.obs — structured tracing, straggler metrics, profiling hooks.
+
+The observability substrate under every execution layer (DESIGN.md §11):
+
+  * :mod:`repro.obs.trace`   — :class:`TraceRecorder`: per-iteration
+    straggler timelines from the ``ClusterEngine`` + host-clock phase spans,
+    exported as JSONL and Chrome/Perfetto ``trace_event`` JSON;
+  * :mod:`repro.obs.metrics` — counter/gauge/histogram registry + the
+    per-cell summarizers (miss-rate, active-set distribution, step-latency
+    percentiles, staleness histogram + clamp counts);
+  * :mod:`repro.obs.timing`  — the ONE clock/blocking discipline
+    (``block`` / ``time_us``) and :class:`CompileWatch`, which splits jit
+    compile time out of execute time via ``jax.monitoring``;
+  * :mod:`repro.obs.profile` — opt-in ``jax.profiler`` capture and
+    device-memory high-water marks;
+  * ``python -m repro.obs.report`` — text straggler-timeline /
+    phase-breakdown reports from a saved trace.
+
+Design rule: with no active recorder every hook is a single ``is None``
+check — observability off is a zero-cost no-op path.
+"""
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      async_metrics, cell_summary, clamp_async_event,
+                      schedule_metrics)
+from .profile import memory_high_water, memory_stats, profile_region
+from .timing import CompileWatch, block, emit, time_us
+from .trace import TraceEvent, TraceRecorder, current_recorder, span
+
+__all__ = [
+    "TraceEvent", "TraceRecorder", "current_recorder", "span",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "schedule_metrics", "async_metrics", "cell_summary",
+    "clamp_async_event",
+    "CompileWatch", "block", "time_us", "emit",
+    "profile_region", "memory_stats", "memory_high_water",
+]

@@ -1,0 +1,226 @@
+"""Lightweight metrics: counters/gauges/histograms + per-cell summaries.
+
+Two layers (DESIGN.md §11):
+
+  * a tiny process-local :class:`MetricsRegistry` (counter / gauge /
+    histogram) for code that wants to count things as it goes — no
+    background threads, no exporters, ``summary()`` renders the whole
+    registry as a JSON-safe dict;
+  * pure summarizers over the engine's realized artifacts —
+    :func:`schedule_metrics` (per-worker miss-rate, active-set-size
+    distribution, p50/p95/p99 step latency) and :func:`async_metrics`
+    (staleness histogram, drop/clamp counts) — which
+    ``repro.experiments.execute`` attaches to the canonical record as the
+    ``obs`` key and ``write_metrics_csv`` flattens to the per-cell CSV.
+
+Metric names are stable identifiers (the report CLI and tests key on
+them): ``miss_rate``, ``active_size``, ``step_latency_s``, ``staleness``,
+``staleness_clamped``, ``dropped``, ``compile_s``, ``execute_s``,
+``compiles``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "schedule_metrics", "async_metrics", "clamp_async_event",
+    "cell_summary",
+]
+
+
+class Counter:
+    """A monotonically increasing count."""
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+
+class Gauge:
+    """A last-write-wins scalar."""
+
+    def __init__(self):
+        self.value = None
+
+    def set(self, v) -> None:
+        self.value = v
+
+
+class Histogram:
+    """An exact-sample histogram (cells record at most a few thousand
+    observations, so percentiles are computed from the raw samples instead
+    of fixed buckets)."""
+
+    def __init__(self):
+        self._samples: list = []
+
+    def observe(self, v) -> None:
+        self._samples.append(float(v))
+
+    def observe_many(self, vs) -> None:
+        self._samples.extend(np.asarray(vs, dtype=float).ravel().tolist())
+
+    @property
+    def count(self) -> int:
+        return len(self._samples)
+
+    def summary(self, percentiles=(50, 95, 99)) -> dict:
+        if not self._samples:
+            return {"count": 0}
+        a = np.asarray(self._samples)
+        out = {"count": int(a.size), "mean": float(a.mean()),
+               "min": float(a.min()), "max": float(a.max())}
+        for q in percentiles:
+            out[f"p{q}"] = float(np.percentile(a, q))
+        return out
+
+    def counts(self) -> dict:
+        """Integer-bucket view ``{str(value): occurrences}`` — the natural
+        rendering for discrete quantities (active-set sizes, staleness)."""
+        vals, cnts = np.unique(np.asarray(self._samples, dtype=int),
+                               return_counts=True)
+        return {str(int(v)): int(c) for v, c in zip(vals, cnts)}
+
+
+class MetricsRegistry:
+    """Name -> metric map with one-line accessors; ``summary()`` is the
+    JSON-safe snapshot every consumer (records, report CLI) reads."""
+
+    def __init__(self):
+        self._metrics: dict = {}
+
+    def _get(self, name: str, cls):
+        m = self._metrics.get(name)
+        if m is None:
+            m = self._metrics[name] = cls()
+        elif not isinstance(m, cls):
+            raise TypeError(f"metric '{name}' is {type(m).__name__}, "
+                            f"not {cls.__name__}")
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get(name, Histogram)
+
+    def summary(self) -> dict:
+        out = {}
+        for name, m in sorted(self._metrics.items()):
+            if isinstance(m, Histogram):
+                out[name] = m.summary()
+            else:
+                out[name] = m.value
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Engine-artifact summarizers
+# ---------------------------------------------------------------------------
+
+def schedule_metrics(schedules) -> dict:
+    """Summarize realized synchronous ``Schedule``s (one or many — batched
+    cells pass all R realizations, chunked workloads every sub-solve).
+
+    Returns per-worker ``miss_rate`` (fraction of iterations worker i was
+    erased), the ``active_size`` distribution, and per-iteration
+    ``step_latency_s`` (commit-to-commit barrier time) percentiles.
+    Schedules whose worker count differs from the first are skipped (a
+    matrix cell never mixes cluster sizes).
+    """
+    schedules = [s for s in schedules if s is not None]
+    if not schedules:
+        return {}
+    m = schedules[0].m
+    masks = np.concatenate([np.asarray(s.masks, dtype=float)
+                            for s in schedules if s.m == m], axis=0)
+    lat = Histogram()
+    active = Histogram()
+    for s in schedules:
+        if s.m != m:
+            continue
+        times = np.asarray(s.times, dtype=float)
+        lat.observe_many(np.diff(times, prepend=0.0))
+        active.observe_many(np.asarray(s.masks).sum(axis=1))
+    miss = 1.0 - masks.mean(axis=0)
+    return {
+        "iterations": int(masks.shape[0]),
+        "workers": int(m),
+        "miss_rate": [float(x) for x in miss],
+        "mean_miss_rate": float(miss.mean()),
+        "max_miss_rate": float(miss.max()),
+        "active_size": {**active.summary(), "hist": active.counts()},
+        "step_latency_s": lat.summary(),
+    }
+
+
+def clamp_async_event(u: int, tau: int, rv: int, total: int) -> tuple:
+    """Snap one async (update index, staleness, read_version) triple into
+    range; returns ``(tau, rv, was_clamped)``.
+
+    The engine's invariant is ``rv + tau == u`` with ``0 <= tau <= u`` and
+    ``rv < total``; a hand-built or corrupted trace can violate it, which
+    would silently wrap downstream ring buffers.  This is the ONE clamp
+    rule, shared by the trace expander (``obs.trace``) and
+    :func:`async_metrics` so the surfaced ``staleness_clamped`` count always
+    matches the exported events.
+    """
+    if rv + tau != u or rv >= total or tau < 0:
+        tau = min(max(tau, 0), u)
+        return tau, u - tau, True
+    return tau, rv, False
+
+
+def async_metrics(traces) -> dict:
+    """Summarize realized ``AsyncTrace``s: staleness histogram, per-arrival
+    latency percentiles, dropped-gradient totals, and the count of events
+    clamped at the trace boundary (see :func:`clamp_async_event`)."""
+    traces = [t for t in traces if t is not None]
+    if not traces:
+        return {}
+    stale = Histogram()
+    lat = Histogram()
+    dropped = 0
+    clamped = 0
+    for t in traces:
+        staleness = np.asarray(t.staleness, dtype=int)
+        reads = np.asarray(t.read_versions, dtype=int)
+        U = staleness.shape[0]
+        for u in range(U):
+            tau, _, was = clamp_async_event(u, int(staleness[u]),
+                                            int(reads[u]), U)
+            stale.observe(tau)
+            clamped += was
+        lat.observe_many(np.diff(np.asarray(t.times, dtype=float),
+                                 prepend=0.0))
+        dropped += int(t.dropped)
+    return {
+        "updates": stale.count,
+        "workers": int(traces[0].m),
+        "staleness": {**stale.summary(), "hist": stale.counts()},
+        "update_latency_s": lat.summary(),
+        "dropped": dropped,
+        "staleness_clamped": clamped,
+    }
+
+
+def cell_summary(sources) -> dict:
+    """Per-cell ``obs`` summary from a recorder's engine-artifact slice
+    (``TraceRecorder.sources_since``): synchronous schedules and async
+    traces summarized side by side."""
+    scheds = [s.obj for s in sources if s.tag == "schedule"]
+    asyncs = [s.obj for s in sources if s.tag == "async"]
+    out: dict = {}
+    sm = schedule_metrics(scheds)
+    if sm:
+        out["schedule"] = sm
+    am = async_metrics(asyncs)
+    if am:
+        out["async"] = am
+    return out

@@ -1,0 +1,77 @@
+"""Opt-in profiling hooks: ``jax.profiler`` capture + device-memory peaks.
+
+Everything here degrades to a no-op when the backend (or jax build) does
+not support it — CPU wheels often return ``None`` from
+``Device.memory_stats()`` and some environments ship without the profiler
+plugin; opt-in observability must never take a run down.
+
+  * :func:`profile_region` — context manager starting/stopping a
+    ``jax.profiler`` trace into a per-cell logdir (open the result in
+    TensorBoard or https://ui.perfetto.dev);
+  * :func:`memory_stats`    — per-device byte counters, normalized to
+    ``{device: {bytes_in_use, peak_bytes_in_use, ...}}``;
+  * :func:`memory_high_water` — the max ``peak_bytes_in_use`` across
+    devices (or ``bytes_in_use`` where the backend tracks no peak), the
+    single gauge attached to cell records.
+"""
+from __future__ import annotations
+
+import contextlib
+
+__all__ = ["profile_region", "memory_stats", "memory_high_water"]
+
+_KEYS = ("bytes_in_use", "peak_bytes_in_use", "bytes_limit",
+         "largest_alloc_size")
+
+
+@contextlib.contextmanager
+def profile_region(logdir: str | None):
+    """Capture a ``jax.profiler`` trace of the block into ``logdir``
+    (``None`` — and any profiler failure — makes this a plain no-op)."""
+    started = False
+    if logdir:
+        try:
+            import jax.profiler
+            jax.profiler.start_trace(logdir)
+            started = True
+        except Exception as e:          # missing plugin / nested trace
+            print(f"# obs: jax.profiler unavailable ({e}); skipping capture")
+    try:
+        yield
+    finally:
+        if started:
+            try:
+                import jax.profiler
+                jax.profiler.stop_trace()
+            except Exception:
+                pass
+
+
+def memory_stats() -> dict:
+    """``{device_str: {counter: bytes}}`` for every local device; devices
+    whose backend exposes no stats (CPU) are omitted."""
+    try:
+        import jax
+        devices = jax.local_devices()
+    except Exception:
+        return {}
+    out: dict = {}
+    for d in devices:
+        try:
+            ms = d.memory_stats()
+        except Exception:
+            ms = None
+        if not ms:
+            continue
+        out[str(d)] = {k: int(ms[k]) for k in _KEYS if k in ms}
+    return out
+
+
+def memory_high_water() -> int | None:
+    """Max peak bytes in use across local devices (``None`` when no device
+    reports memory counters — e.g. the CPU backend)."""
+    stats = memory_stats()
+    if not stats:
+        return None
+    return max(s.get("peak_bytes_in_use", s.get("bytes_in_use", 0))
+               for s in stats.values())

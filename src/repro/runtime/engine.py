@@ -28,6 +28,9 @@ from repro.core.straggler import (DelayModel, adaptive_k, bimodal_delays,
                                   constant_delays, exponential_delays,
                                   fastest_k, multimodal_delays,
                                   power_law_delays)
+# obs hooks: with no active TraceRecorder, each is a single None-check
+from repro.obs.trace import current_recorder as _obs_recorder
+from repro.obs.trace import span as _obs_span
 
 __all__ = [
     "DELAY_MODELS", "make_delay_model", "ActiveSetPolicy", "FastestK",
@@ -247,6 +250,10 @@ class ClusterEngine:
         self.compute_time = float(compute_time)
         self.master_overhead = float(master_overhead)
         self.seed = int(seed)
+        # which realization lane this engine's samples record under when an
+        # obs TraceRecorder is active; engine.trial(r) children carry r so
+        # host-loop harnesses land on the same lanes as batched samplers
+        self._obs_realization = 0
 
     # -- trial seeding ---------------------------------------------------
 
@@ -268,10 +275,12 @@ class ClusterEngine:
         chunked workloads) trial by trial on the same realizations."""
         if realization == 0:
             return self
-        return ClusterEngine(self.delay_model, self.m,
-                             compute_time=self.compute_time,
-                             master_overhead=self.master_overhead,
-                             seed=self._trial_seed(realization))
+        child = ClusterEngine(self.delay_model, self.m,
+                              compute_time=self.compute_time,
+                              master_overhead=self.master_overhead,
+                              seed=self._trial_seed(realization))
+        child._obs_realization = self._obs_realization + realization
+        return child
 
     # -- synchronous (barrier) mode -------------------------------------
 
@@ -283,25 +292,33 @@ class ClusterEngine:
         arrives ``compute_time + delay_i`` later; the master commits at the
         latest arrival over A_t plus ``master_overhead``.
         """
-        rng = np.random.default_rng(self._trial_seed(realization))
-        policy.reset()
-        now = 0.0
-        prev_active: np.ndarray | None = None
-        masks = np.zeros((steps, self.m), dtype=np.float32)
-        times = np.zeros(steps)
-        events = []
-        for t in range(steps):
-            delays = np.asarray(self.delay_model(rng, self.m), dtype=float)
-            arrivals = now + self.compute_time + delays
-            active = np.asarray(policy.select(t, delays, prev_active))
-            commit = float(arrivals[active].max()) + self.master_overhead
-            masks[t, active] = 1.0
-            times[t] = commit
-            events.append(IterationEvent(t=t, start=now, commit=commit,
-                                         active=active, arrivals=arrivals))
-            now = commit
-            prev_active = active
-        return Schedule(self.m, masks, times, tuple(events))
+        with _obs_span("sample-schedule", steps=steps, m=self.m):
+            rng = np.random.default_rng(self._trial_seed(realization))
+            policy.reset()
+            now = 0.0
+            prev_active: np.ndarray | None = None
+            masks = np.zeros((steps, self.m), dtype=np.float32)
+            times = np.zeros(steps)
+            events = []
+            for t in range(steps):
+                delays = np.asarray(self.delay_model(rng, self.m),
+                                    dtype=float)
+                arrivals = now + self.compute_time + delays
+                active = np.asarray(policy.select(t, delays, prev_active))
+                commit = float(arrivals[active].max()) + self.master_overhead
+                masks[t, active] = 1.0
+                times[t] = commit
+                events.append(IterationEvent(t=t, start=now, commit=commit,
+                                             active=active,
+                                             arrivals=arrivals))
+                now = commit
+                prev_active = active
+            sched = Schedule(self.m, masks, times, tuple(events))
+        rec = _obs_recorder()
+        if rec is not None:
+            rec.record_schedule(
+                sched, realization=self._obs_realization + realization)
+        return sched
 
     def sample_schedules(self, steps: int, policy: ActiveSetPolicy,
                          trials: int) -> ScheduleBatch:
@@ -340,39 +357,45 @@ class ClusterEngine:
         """
         if staleness_bound < 0:
             raise ValueError("staleness_bound must be >= 0")
-        rng = np.random.default_rng(self._trial_seed(realization))
-        read_version = np.zeros(self.m, dtype=np.int64)  # per-worker timestamp
-        version = 0
-        heap: list[tuple[float, int]] = []
-        first = np.asarray(self.delay_model(rng, self.m), dtype=float)
-        for i in range(self.m):
-            heapq.heappush(heap, (self.compute_time + first[i], i))
+        with _obs_span("sample-async", updates=updates, m=self.m):
+            rng = np.random.default_rng(self._trial_seed(realization))
+            read_version = np.zeros(self.m, dtype=np.int64)  # per-worker ts
+            version = 0
+            heap: list[tuple[float, int]] = []
+            first = np.asarray(self.delay_model(rng, self.m), dtype=float)
+            for i in range(self.m):
+                heapq.heappush(heap, (self.compute_time + first[i], i))
 
-        workers, stale, reads, times = [], [], [], []
-        dropped = 0
-        while len(workers) < updates:
-            arrival, i = heapq.heappop(heap)
-            tau = version - read_version[i]
-            if tau <= staleness_bound:
-                workers.append(i)
-                stale.append(tau)
-                reads.append(read_version[i])
-                times.append(arrival + self.master_overhead)
-                version += 1
-            else:
-                dropped += 1
-            # worker re-reads the (possibly updated) parameters and restarts
-            read_version[i] = version
-            delay = float(np.asarray(self.delay_model(rng, 1))[0])
-            heapq.heappush(heap, (arrival + self.compute_time + delay, i))
-        return AsyncTrace(
-            m=self.m,
-            workers=np.asarray(workers, dtype=np.int32),
-            staleness=np.asarray(stale, dtype=np.int32),
-            read_versions=np.asarray(reads, dtype=np.int32),
-            times=np.asarray(times),
-            dropped=dropped,
-        )
+            workers, stale, reads, times = [], [], [], []
+            dropped = 0
+            while len(workers) < updates:
+                arrival, i = heapq.heappop(heap)
+                tau = version - read_version[i]
+                if tau <= staleness_bound:
+                    workers.append(i)
+                    stale.append(tau)
+                    reads.append(read_version[i])
+                    times.append(arrival + self.master_overhead)
+                    version += 1
+                else:
+                    dropped += 1
+                # worker re-reads the (possibly updated) parameters, restarts
+                read_version[i] = version
+                delay = float(np.asarray(self.delay_model(rng, 1))[0])
+                heapq.heappush(heap, (arrival + self.compute_time + delay, i))
+            trace = AsyncTrace(
+                m=self.m,
+                workers=np.asarray(workers, dtype=np.int32),
+                staleness=np.asarray(stale, dtype=np.int32),
+                read_versions=np.asarray(reads, dtype=np.int32),
+                times=np.asarray(times),
+                dropped=dropped,
+            )
+        rec = _obs_recorder()
+        if rec is not None:
+            rec.record_async(
+                trace, realization=self._obs_realization + realization)
+        return trace
 
     def sample_asyncs(self, updates: int, staleness_bound: int,
                       trials: int) -> AsyncBatch:

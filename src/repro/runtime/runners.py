@@ -38,6 +38,7 @@ from jax.sharding import Mesh, PartitionSpec
 from repro.core.data_parallel import (EncodedProblem, masked_gradient,
                                       original_objective, prox_l1)
 from repro.core.model_parallel import LiftedProblem
+from repro.obs.trace import current_recorder as _obs_recorder
 
 __all__ = [
     "scan_gd", "scan_prox", "scan_bcd", "scan_async",
@@ -46,6 +47,20 @@ __all__ = [
     "sharded_scan_gd", "sharded_scan_prox", "sharded_scan_async",
     "trials_device_count",
 ]
+
+
+def _traced_call(name: str, fn, *args, **kw):
+    """Dispatch a runner; under an active obs ``TraceRecorder`` the call is
+    wrapped in a host-clock span and blocked on every output leaf so the
+    span covers the real device execute time.  With tracing off this is one
+    module-global check and the dispatch stays asynchronous."""
+    rec = _obs_recorder()
+    if rec is None:
+        return fn(*args, **kw)
+    with rec.span(name):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -113,6 +128,13 @@ def _strided_scan(step, evalf, carry0, xs, eval_every: int):
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("h",))
+def _scan_gd(prob: EncodedProblem, masks: jax.Array, step_size,
+             w0: jax.Array, h: str = "l2"):
+    return _strided_scan(lambda w, mask: _gd_step(prob, w, mask, step_size, h),
+                         lambda w: original_objective(prob, w, h=h),
+                         w0, masks, 1)
+
+
 def scan_gd(prob: EncodedProblem, masks: jax.Array, step_size,
             w0: jax.Array, h: str = "l2"):
     """Encoded GD over a (T, m) mask schedule, fused into one scan.
@@ -120,18 +142,22 @@ def scan_gd(prob: EncodedProblem, masks: jax.Array, step_size,
     Returns (w_T, trace) with trace[t] = f(w_{t+1}) on the original problem —
     the same convention as the legacy per-step loop.
     """
-    return _strided_scan(lambda w, mask: _gd_step(prob, w, mask, step_size, h),
-                         lambda w: original_objective(prob, w, h=h),
-                         w0, masks, 1)
+    return _traced_call("runner:gd", _scan_gd, prob, masks, step_size, w0,
+                        h=h)
 
 
 @jax.jit
-def scan_prox(prob: EncodedProblem, masks: jax.Array, step_size,
-              w0: jax.Array):
-    """Encoded proximal gradient (ISTA, l1) over a mask schedule."""
+def _scan_prox(prob: EncodedProblem, masks: jax.Array, step_size,
+               w0: jax.Array):
     return _strided_scan(lambda w, mask: _prox_step(prob, w, mask, step_size),
                          lambda w: original_objective(prob, w, h="l1"),
                          w0, masks, 1)
+
+
+def scan_prox(prob: EncodedProblem, masks: jax.Array, step_size,
+              w0: jax.Array):
+    """Encoded proximal gradient (ISTA, l1) over a mask schedule."""
+    return _traced_call("runner:prox", _scan_prox, prob, masks, step_size, w0)
 
 
 # LiftedProblem carries Python callables (phi), so the scan cannot be jitted
@@ -166,10 +192,23 @@ def scan_bcd(prob: LiftedProblem, masks: jax.Array, step_size,
     t-th commit, with the final objective appended (length T + 1).
     """
     run = _bcd_runner(prob.phi_val, prob.phi_grad)
-    return run(prob.XS, masks, jnp.asarray(step_size, prob.XS.dtype), v0)
+    return _traced_call("runner:bcd", run, prob.XS, masks,
+                        jnp.asarray(step_size, prob.XS.dtype), v0)
 
 
 @partial(jax.jit, static_argnames=("buffer_size", "h"))
+def _scan_async(prob: EncodedProblem, workers: jax.Array,
+                staleness: jax.Array, step_size, w0: jax.Array,
+                buffer_size: int, h: str = "l2"):
+    buf0 = jnp.tile(w0[None], (buffer_size, 1))
+    (w_final, _, _), trace = _strided_scan(
+        lambda c, ev: _async_step(prob, c, ev, step_size, buffer_size, h),
+        lambda c: original_objective(prob, c[0], h=h),
+        (w0, buf0, jnp.int32(0)),
+        (workers.astype(jnp.int32), staleness.astype(jnp.int32)), 1)
+    return w_final, trace
+
+
 def scan_async(prob: EncodedProblem, workers: jax.Array, staleness: jax.Array,
                step_size, w0: jax.Array, buffer_size: int, h: str = "l2"):
     """Asynchronous stale-gradient SGD over a per-arrival event stream.
@@ -183,13 +222,8 @@ def scan_async(prob: EncodedProblem, workers: jax.Array, staleness: jax.Array,
     immediately.  The per-worker gradient is scaled by m so it is an unbiased
     estimate of the full gradient.
     """
-    buf0 = jnp.tile(w0[None], (buffer_size, 1))
-    (w_final, _, _), trace = _strided_scan(
-        lambda c, ev: _async_step(prob, c, ev, step_size, buffer_size, h),
-        lambda c: original_objective(prob, c[0], h=h),
-        (w0, buf0, jnp.int32(0)),
-        (workers.astype(jnp.int32), staleness.astype(jnp.int32)), 1)
-    return w_final, trace
+    return _traced_call("runner:async", _scan_async, prob, workers, staleness,
+                        step_size, w0, buffer_size=buffer_size, h=h)
 
 
 # ---------------------------------------------------------------------------
@@ -208,6 +242,11 @@ def _batched_gd(prob: EncodedProblem, masks: jax.Array, step_size,
 
 
 @partial(jax.jit, static_argnames=("h", "eval_every"), donate_argnums=(3,))
+def _batched_scan_gd(prob: EncodedProblem, masks: jax.Array, step_size,
+                     w0: jax.Array, h: str = "l2", eval_every: int = 1):
+    return _batched_gd(prob, masks, step_size, w0, h, eval_every)
+
+
 def batched_scan_gd(prob: EncodedProblem, masks: jax.Array, step_size,
                     w0: jax.Array, h: str = "l2", eval_every: int = 1):
     """R realizations of encoded GD in one compiled program.
@@ -217,7 +256,8 @@ def batched_scan_gd(prob: EncodedProblem, masks: jax.Array, step_size,
     trace (R, T // eval_every)) with trace[r, j] = f(w after step
     (j+1)*eval_every) of realization r.
     """
-    return _batched_gd(prob, masks, step_size, w0, h, eval_every)
+    return _traced_call("runner:batched_gd", _batched_scan_gd, prob, masks,
+                        step_size, w0, h=h, eval_every=eval_every)
 
 
 def _batched_prox(prob: EncodedProblem, masks: jax.Array, step_size,
@@ -232,11 +272,17 @@ def _batched_prox(prob: EncodedProblem, masks: jax.Array, step_size,
 
 
 @partial(jax.jit, static_argnames=("eval_every",), donate_argnums=(3,))
+def _batched_scan_prox(prob: EncodedProblem, masks: jax.Array, step_size,
+                       w0: jax.Array, eval_every: int = 1):
+    return _batched_prox(prob, masks, step_size, w0, eval_every)
+
+
 def batched_scan_prox(prob: EncodedProblem, masks: jax.Array, step_size,
                       w0: jax.Array, eval_every: int = 1):
     """R realizations of encoded ISTA in one compiled program (see
     ``batched_scan_gd`` for the axis/donation/eval_every conventions)."""
-    return _batched_prox(prob, masks, step_size, w0, eval_every)
+    return _traced_call("runner:batched_prox", _batched_scan_prox, prob,
+                        masks, step_size, w0, eval_every=eval_every)
 
 
 @lru_cache(maxsize=8)
@@ -270,8 +316,9 @@ def batched_scan_bcd(prob: LiftedProblem, masks: jax.Array, step_size,
     strategy reports anyway.
     """
     run = _bcd_batched_runner(prob.phi_val, prob.phi_grad)
-    return run(prob.XS, masks, jnp.asarray(step_size, prob.XS.dtype), v0,
-               eval_every=eval_every)
+    return _traced_call("runner:batched_bcd", run, prob.XS, masks,
+                        jnp.asarray(step_size, prob.XS.dtype), v0,
+                        eval_every=eval_every)
 
 
 def _batched_async(prob: EncodedProblem, workers: jax.Array,
@@ -292,6 +339,13 @@ def _batched_async(prob: EncodedProblem, workers: jax.Array,
 
 @partial(jax.jit, static_argnames=("buffer_size", "h", "eval_every"),
          donate_argnums=(4,))
+def _batched_scan_async(prob: EncodedProblem, workers: jax.Array,
+                        staleness: jax.Array, step_size, w0: jax.Array,
+                        buffer_size: int, h: str = "l2", eval_every: int = 1):
+    return _batched_async(prob, workers, staleness, step_size, w0,
+                          buffer_size, h, eval_every)
+
+
 def batched_scan_async(prob: EncodedProblem, workers: jax.Array,
                        staleness: jax.Array, step_size, w0: jax.Array,
                        buffer_size: int, h: str = "l2", eval_every: int = 1):
@@ -300,8 +354,9 @@ def batched_scan_async(prob: EncodedProblem, workers: jax.Array,
     workers/staleness: (R, U) stacked event streams; w0: (R, p) (donated).
     Returns (w (R, p), trace (R, U // eval_every)).
     """
-    return _batched_async(prob, workers, staleness, step_size, w0,
-                          buffer_size, h, eval_every)
+    return _traced_call("runner:batched_async", _batched_scan_async, prob,
+                        workers, staleness, step_size, w0,
+                        buffer_size=buffer_size, h=h, eval_every=eval_every)
 
 
 # ---------------------------------------------------------------------------
@@ -355,7 +410,8 @@ def sharded_scan_gd(prob: EncodedProblem, masks: jax.Array, step_size,
                                 eval_every=eval_every)
         return w, tr, 1
     fn = _sharded_fn("gd", ndev, h, eval_every, 0)
-    w, tr = fn(prob, masks, jnp.asarray(step_size, jnp.float32), w0)
+    w, tr = _traced_call("runner:sharded_gd", fn, prob, masks,
+                         jnp.asarray(step_size, jnp.float32), w0)
     return w, tr, ndev
 
 
@@ -369,7 +425,8 @@ def sharded_scan_prox(prob: EncodedProblem, masks: jax.Array, step_size,
                                   eval_every=eval_every)
         return w, tr, 1
     fn = _sharded_fn("prox", ndev, "l1", eval_every, 0)
-    w, tr = fn(prob, masks, jnp.asarray(step_size, jnp.float32), w0)
+    w, tr = _traced_call("runner:sharded_prox", fn, prob, masks,
+                         jnp.asarray(step_size, jnp.float32), w0)
     return w, tr, ndev
 
 
@@ -384,6 +441,6 @@ def sharded_scan_async(prob: EncodedProblem, workers: jax.Array,
                                    buffer_size, h=h, eval_every=eval_every)
         return w, tr, 1
     fn = _sharded_fn("async", ndev, h, eval_every, buffer_size)
-    w, tr = fn(prob, workers, staleness, jnp.asarray(step_size, jnp.float32),
-               w0)
+    w, tr = _traced_call("runner:sharded_async", fn, prob, workers, staleness,
+                         jnp.asarray(step_size, jnp.float32), w0)
     return w, tr, ndev

@@ -23,6 +23,7 @@ from repro.core.encoding import LinearEncoder, make_encoder
 from repro.core import operators  # noqa: F401  (registers matrix-free encoders)
 from repro.core.lbfgs import run_encoded_lbfgs
 from repro.core.model_parallel import make_lifted_problem, phi_quadratic
+from repro.obs.trace import span as _obs_span
 
 from .engine import ActiveSetPolicy, AsyncTrace, ClusterEngine, FastestK
 from .runners import (batched_scan_async, batched_scan_bcd, batched_scan_gd,
@@ -339,12 +340,15 @@ class _SyncGradientStrategy(Strategy):
         return FastestK(k if k is not None else _default_k(engine.m))
 
     def _problem(self, spec: ProblemSpec, engine: ClusterEngine, cfg: dict):
-        enc = _resolve_encoder(cfg.pop("encoder", self.encoder_name), spec.n,
-                               beta=cfg.pop("beta", self.encoder_beta),
-                               seed=cfg.pop("encoder_seed", 0),
-                               m=engine.m)
-        return enc, make_encoded_problem(spec.X, spec.y, enc, engine.m,
-                                         lam=spec.lam)
+        with _obs_span("encode", strategy=self.name, n=spec.n, m=engine.m):
+            enc = _resolve_encoder(cfg.pop("encoder", self.encoder_name),
+                                   spec.n,
+                                   beta=cfg.pop("beta", self.encoder_beta),
+                                   seed=cfg.pop("encoder_seed", 0),
+                                   m=engine.m)
+            prob = make_encoded_problem(spec.X, spec.y, enc, engine.m,
+                                        lam=spec.lam)
+        return enc, prob
 
     def run(self, spec, engine, *, steps=200, **cfg):
         policy = self._policy(engine, cfg)
@@ -463,7 +467,9 @@ class CodedLBFGS(_SyncGradientStrategy):
         if w0 is not None:
             w0 = jnp.asarray(w0, jnp.float32)
         sched = engine.sample_schedule(steps, policy)
-        w, tr = run_encoded_lbfgs(prob, sched.masks, memory=memory, w0=w0)
+        with _obs_span("runner:lbfgs", steps=steps):
+            w, tr = run_encoded_lbfgs(prob, sched.masks, memory=memory,
+                                      w0=w0)
         return RunResult(
             strategy=self.name, times=sched.times, objective=np.asarray(tr),
             w=np.asarray(w),
@@ -490,8 +496,9 @@ class CodedLBFGS(_SyncGradientStrategy):
         batch = engine.sample_schedules(steps, policy, trials)
         ws, trs = [], []
         for r in range(trials):
-            w, tr = run_encoded_lbfgs(prob, batch.masks[r], memory=memory,
-                                      w0=w0)
+            with _obs_span("runner:lbfgs", steps=steps, realization=r):
+                w, tr = run_encoded_lbfgs(prob, batch.masks[r],
+                                          memory=memory, w0=w0)
             ws.append(np.asarray(w))
             trs.append(np.asarray(tr))
         stride = slice(stride_every - 1, None, stride_every)
@@ -515,11 +522,13 @@ class CodedBCD(_SyncGradientStrategy):
 
     def run(self, spec, engine, *, steps=200, **cfg):
         policy = self._policy(engine, cfg)
-        enc = _resolve_encoder(cfg.pop("encoder", "hadamard"), spec.p,
-                               beta=cfg.pop("beta", 2.0),
-                               seed=cfg.pop("encoder_seed", 0), m=engine.m)
-        val, grad = _phi_quadratic(spec.y)
-        prob = make_lifted_problem(spec.X, enc, engine.m, val, grad)
+        with _obs_span("encode", strategy=self.name, p=spec.p, m=engine.m):
+            enc = _resolve_encoder(cfg.pop("encoder", "hadamard"), spec.p,
+                                   beta=cfg.pop("beta", 2.0),
+                                   seed=cfg.pop("encoder_seed", 0),
+                                   m=engine.m)
+            val, grad = _phi_quadratic(spec.y)
+            prob = make_lifted_problem(spec.X, enc, engine.m, val, grad)
         # Hessian of the lifted quadratic is S X^T X S^T / n, norm <= beta * L
         step_size = cfg.pop("step_size", None) or \
             0.9 / (spec.lipschitz() * float(enc.beta))
@@ -544,11 +553,13 @@ class CodedBCD(_SyncGradientStrategy):
         check_trials(steps, trials, eval_every)
         stride_every = resolve_eval_every(steps, eval_every)
         policy = self._policy(engine, cfg)
-        enc = _resolve_encoder(cfg.pop("encoder", "hadamard"), spec.p,
-                               beta=cfg.pop("beta", 2.0),
-                               seed=cfg.pop("encoder_seed", 0), m=engine.m)
-        val, grad = _phi_quadratic(spec.y)
-        prob = make_lifted_problem(spec.X, enc, engine.m, val, grad)
+        with _obs_span("encode", strategy=self.name, p=spec.p, m=engine.m):
+            enc = _resolve_encoder(cfg.pop("encoder", "hadamard"), spec.p,
+                                   beta=cfg.pop("beta", 2.0),
+                                   seed=cfg.pop("encoder_seed", 0),
+                                   m=engine.m)
+            val, grad = _phi_quadratic(spec.y)
+            prob = make_lifted_problem(spec.X, enc, engine.m, val, grad)
         step_size = cfg.pop("step_size", None) or \
             0.9 / (spec.lipschitz() * float(enc.beta))
         batch = engine.sample_schedules(steps, policy, trials)
@@ -595,8 +606,9 @@ class AsyncSGD(Strategy):
         bound = int(cfg.pop("staleness_bound", 2 * m))
         updates = int(cfg.pop("updates", steps * m))
         step_size = (cfg.pop("step_size", None) or _auto_step(spec)) / m
-        enc = make_encoder("uncoded", spec.n, beta=1.0).with_workers(m)
-        prob = make_encoded_problem(spec.X, spec.y, enc, m, lam=spec.lam)
+        with _obs_span("encode", strategy=self.name, n=spec.n, m=m):
+            enc = make_encoder("uncoded", spec.n, beta=1.0).with_workers(m)
+            prob = make_encoded_problem(spec.X, spec.y, enc, m, lam=spec.lam)
         trace: AsyncTrace = engine.sample_async(updates, bound)
         w0 = jnp.asarray(cfg.pop("w0", np.zeros(spec.p)), jnp.float32)
         w, tr = scan_async(prob, jnp.asarray(trace.workers),
@@ -637,8 +649,9 @@ class AsyncSGD(Strategy):
                 meta={**results[0].meta, "trials": trials,
                       "eval_every": eval_every, "batched": False})
         step_size = (cfg.pop("step_size", None) or _auto_step(spec)) / m
-        enc = make_encoder("uncoded", spec.n, beta=1.0).with_workers(m)
-        prob = make_encoded_problem(spec.X, spec.y, enc, m, lam=spec.lam)
+        with _obs_span("encode", strategy=self.name, n=spec.n, m=m):
+            enc = make_encoder("uncoded", spec.n, beta=1.0).with_workers(m)
+            prob = make_encoded_problem(spec.X, spec.y, enc, m, lam=spec.lam)
         batch = engine.sample_asyncs(updates, bound, trials)
         w0 = jnp.asarray(cfg.pop("w0", np.zeros(spec.p)), jnp.float32)
         w0 = jnp.tile(w0[None], (trials, 1))       # donated by the runner

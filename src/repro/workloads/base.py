@@ -28,6 +28,7 @@ from typing import Any
 import numpy as np
 
 from repro.configs.paper_native import QuadraticProblemConfig
+from repro.obs.trace import span as _obs_span
 from repro.runtime.engine import ClusterEngine, make_delay_model
 from repro.runtime.strategies import (RunResult, get_strategy,
                                       json_safe_meta)
@@ -194,8 +195,9 @@ def run_strategy_chunked(strategy: str, spec, engine: ClusterEngine, *,
         chunk_cfg = dict(cfg)
         if w is not None:
             chunk_cfg["w0"] = w
-        result = get_strategy(strategy).run(spec, sub_engine(engine, c),
-                                            steps=chunk, **chunk_cfg)
+        with _obs_span("chunk", strategy=strategy, index=c, steps=chunk):
+            result = get_strategy(strategy).run(spec, sub_engine(engine, c),
+                                                steps=chunk, **chunk_cfg)
         times.extend((now + result.times).tolist())
         objective.extend(np.asarray(result.objective).tolist())
         now += result.wallclock

@@ -21,14 +21,15 @@ import argparse
 import os
 from typing import Sequence
 
-from repro.experiments import (DelayAxis, ExperimentSpec, PlacementAxis,
-                               ProblemAxis, StrategyAxis, TrialsAxis,
-                               execute, plan, print_table, trials_record,
-                               write_json, write_summary_csv)
+from repro.experiments import (DelayAxis, ExperimentSpec, ObsAxis,
+                               PlacementAxis, ProblemAxis, StrategyAxis,
+                               TrialsAxis, execute, plan, print_table,
+                               trials_record, write_json, write_metrics_csv,
+                               write_summary_csv)
 from repro.workloads.base import available_workloads
 
 __all__ = ["run_workload_matrix", "trials_record", "write_json",
-           "write_summary_csv", "main"]
+           "write_summary_csv", "write_metrics_csv", "main"]
 
 
 def run_workload_matrix(workloads: Sequence[str], strategies: Sequence[str],
@@ -36,7 +37,8 @@ def run_workload_matrix(workloads: Sequence[str], strategies: Sequence[str],
                         delays: Sequence[str] | None = None, seed: int = 0,
                         m: int | None = None, compute_time: float = 0.05,
                         trials: int = 1, eval_every: int = 1,
-                        placement: str = "vmap", **cfg) -> list[dict]:
+                        placement: str = "vmap",
+                        obs: ObsAxis | None = None, **cfg) -> list[dict]:
     """Run every (workload, delay, strategy) cell; returns one record each.
 
     Legacy API shim over ``repro.experiments``: ``delays=None`` uses each
@@ -45,7 +47,9 @@ def run_workload_matrix(workloads: Sequence[str], strategies: Sequence[str],
     any strategy kwargs) is forwarded to every cell.  ``trials=R`` stacks R
     delay realizations per cell (fused into one compiled program where the
     lowering allows, with ``placement`` choosing single/vmap/sharded
-    execution) and the record carries mean/p50/p95 summaries.
+    execution) and the record carries mean/p50/p95 summaries.  ``obs`` is
+    the optional observability axis (trace export / per-cell metrics);
+    default None keeps the legacy record schema byte-for-byte.
     """
     cfg = dict(cfg)
     k = cfg.pop("k", None)
@@ -60,7 +64,8 @@ def run_workload_matrix(workloads: Sequence[str], strategies: Sequence[str],
         delays=DelayAxis(delays=tuple(delays or ()), m=m,
                          compute_time=compute_time),
         trials=TrialsAxis(trials=trials, eval_every=eval_every, seed=seed),
-        placement=PlacementAxis(mode=placement), steps=steps)
+        placement=PlacementAxis(mode=placement), steps=steps,
+        obs=obs if obs is not None else ObsAxis())
     return execute(plan(spec)).records
 
 
@@ -97,6 +102,11 @@ def main(argv: Sequence[str] | None = None) -> list[dict]:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="runs/workloads")
     ap.add_argument("--formats", default="json,csv")
+    ap.add_argument("--trace", default=None, metavar="PREFIX",
+                    help="write <PREFIX>.jsonl + <PREFIX>.perfetto.json "
+                         "straggler traces (repro.obs)")
+    ap.add_argument("--metrics-out", default=None, metavar="CSV",
+                    help="write the per-cell obs metrics CSV")
     args = ap.parse_args(argv)
 
     workloads = (available_workloads() if args.workload == "all" else
@@ -112,11 +122,13 @@ def main(argv: Sequence[str] | None = None) -> list[dict]:
     if args.encoder is not None:
         cfg["encoder"] = args.encoder
 
+    obs = (ObsAxis(trace=args.trace, metrics=bool(args.metrics_out))
+           if (args.trace or args.metrics_out) else None)
     records = run_workload_matrix(workloads, strategies, preset=args.preset,
                                   delays=delays, seed=args.seed,
                                   trials=args.trials,
                                   eval_every=args.eval_every,
-                                  placement=args.placement, **cfg)
+                                  placement=args.placement, obs=obs, **cfg)
 
     os.makedirs(args.out, exist_ok=True)
     formats = {f.strip() for f in args.formats.split(",")}
@@ -124,6 +136,12 @@ def main(argv: Sequence[str] | None = None) -> list[dict]:
         write_json(records, os.path.join(args.out, "workloads.json"))
     if "csv" in formats:
         write_summary_csv(records, os.path.join(args.out, "summary.csv"))
+    if args.metrics_out:
+        d = os.path.dirname(args.metrics_out)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        write_metrics_csv(records, args.metrics_out)
+        print(f"wrote obs metrics to {args.metrics_out}")
     print_table(records)
     print(f"wrote {sorted(formats)} to {args.out}/")
     return records
