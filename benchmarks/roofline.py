@@ -1,16 +1,71 @@
-"""Render the §Roofline table from dry-run JSON artifacts.
+"""Render the §Roofline table from dry-run JSON artifacts, and the
+achieved-vs-peak table for the fused masked-gradient path.
 
   PYTHONPATH=src python -m benchmarks.roofline --dir runs/dryrun [--md]
+  PYTHONPATH=src python -m benchmarks.roofline --fused BENCH_fused.json
 
-Reads every <arch>__<shape>__<mesh>.json emitted by repro.launch.dryrun and
-prints the three roofline terms, dominant bottleneck, MODEL_FLOPS ratio and
-memory footprint per combo.
+The first form reads every <arch>__<shape>__<mesh>.json emitted by
+repro.launch.dryrun and prints the three roofline terms, dominant
+bottleneck, MODEL_FLOPS ratio and memory footprint per combo.
+
+The second reads ``benchmarks.bench_fused``'s kernel records (measured us
+per call + analytic FLOPs and ideal HBM bytes) and prints achieved
+GFLOP/s and GB/s against the backend's nominal peaks, plus the implied
+arithmetic intensity and the roofline-predicted bound.  Interpret-mode
+(CPU emulator) rows are marked — their utilization reflects the Pallas
+interpreter, not the TPU dataflow.  Peaks are nominal per-backend
+defaults, overridable with ``--peak-gflops`` / ``--peak-gbps``.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+
+# nominal single-chip peaks; override per deployment with the CLI flags.
+# TPU numbers are the v5e spec (bf16 MXU / HBM2e); CPU numbers a typical
+# server core-complex — interpret-mode rows are denominated against them
+# only to make the emulator overhead visible.
+PEAKS = {
+    "tpu": {"gflops": 394e3 / 2, "gbps": 819.0},   # f32 ~ half bf16 peak
+    "cpu": {"gflops": 200.0, "gbps": 50.0},
+    "gpu": {"gflops": 19.5e3, "gbps": 900.0},
+}
+
+
+def fused_table(path: str, *, peak_gflops: float | None = None,
+                peak_gbps: float | None = None, md: bool = False) -> None:
+    """Achieved-vs-peak rows for every kernel case in BENCH_fused.json."""
+    with open(path) as f:
+        data = json.load(f)
+    backend = data.get("backend", "cpu")
+    peaks = PEAKS.get(backend, PEAKS["cpu"])
+    pg = peak_gflops or peaks["gflops"]
+    pb = peak_gbps or peaks["gbps"]
+    hdr = ["case", "mode", "m", "r", "p", "us", "GFLOP/s", "%peak",
+           "GB/s", "%peak_bw", "intensity", "bound"]
+    sep = " | " if md else ","
+    if md:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+    else:
+        print(sep.join(hdr))
+    for r in data.get("kernel", []):
+        s = r["us_fused"] * 1e-6
+        gflops = r["flops"] / s / 1e9
+        gbps = r["bytes_ideal"] / s / 1e9
+        intensity = r["flops"] / r["bytes_ideal"]
+        bound = "compute" if intensity > pg / pb else "memory"
+        cells = [r["case"], r["mode"], r["m"], r["r"], r["p"],
+                 f"{r['us_fused']:.1f}", f"{gflops:.2f}",
+                 f"{100 * gflops / pg:.2f}%", f"{gbps:.2f}",
+                 f"{100 * gbps / pb:.2f}%", f"{intensity:.1f}", bound]
+        line = sep.join(str(c) for c in cells)
+        print(("| " + line + " |") if md else line)
+    note = (f"backend={backend} peaks: {pg:.0f} GFLOP/s, {pb:.0f} GB/s"
+            + (" (interpret rows measure the emulator)"
+               if backend != "tpu" else ""))
+    print(f"{'<!-- ' if md else '# '}{note}{' -->' if md else ''}")
 
 
 def load_records(d: str):
@@ -45,7 +100,16 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="runs/dryrun")
     ap.add_argument("--md", action="store_true")
+    ap.add_argument("--fused", default=None, metavar="BENCH_fused.json",
+                    help="print achieved-vs-peak for the fused kernel "
+                         "records instead of the dry-run table")
+    ap.add_argument("--peak-gflops", type=float, default=None)
+    ap.add_argument("--peak-gbps", type=float, default=None)
     args = ap.parse_args()
+    if args.fused:
+        fused_table(args.fused, peak_gflops=args.peak_gflops,
+                    peak_gbps=args.peak_gbps, md=args.md)
+        return
     recs = load_records(args.dir)
     hdr = ["arch", "shape", "mesh", "compute_ms", "memory_ms",
            "collective_ms", "bottleneck", "useful_ratio", "mem_GB/dev"]

@@ -14,7 +14,7 @@ def main() -> None:
     from . import (bench_spectrum, bench_ridge, bench_lasso, bench_logistic,
                    bench_matrix_factorization, bench_kernels, bench_coded_lm,
                    bench_runtime, bench_encoding, bench_trials,
-                   bench_experiments)
+                   bench_experiments, bench_fused)
     print("name,us_per_call,derived")
     suites = [
         ("spectrum (paper Figs 5-6)", bench_spectrum.run),
@@ -30,6 +30,8 @@ def main() -> None:
         ("batched trials vs sequential loop (DESIGN §9)", bench_trials.run),
         ("experiment placement axis single/vmap/sharded (DESIGN §10)",
          bench_experiments.run),
+        ("fused masked-gradient path: kernel + cell-batched matrix "
+         "(DESIGN §12)", bench_fused.run),
     ]
     t_all = time.time()
     for title, fn in suites:

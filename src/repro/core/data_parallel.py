@@ -107,12 +107,13 @@ def _masked_mean(g: jax.Array, mask: jax.Array) -> jax.Array:
     interpreted kernel, so it stays the fallback.
     """
     k = jnp.maximum(mask.sum(), 1.0)
-    c = mask * (g.shape[0] / k)
     from repro.kernels.ops import on_tpu
     if on_tpu():
+        # weights go in pre-shaped (m, 1): the kernel's sublane layout,
+        # built here so no per-step reshape survives into the kernel call
         from repro.kernels.coded_reduce import coded_combine_call
-        return coded_combine_call(g, c)
-    return jnp.einsum("m,mp->p", c, g)
+        return coded_combine_call(g, mask[:, None] * (g.shape[0] / k))
+    return jnp.einsum("m,mp->p", mask * (g.shape[0] / k), g)
 
 
 def masked_gradient(prob: EncodedProblem, w: jax.Array,

@@ -156,10 +156,20 @@ def execute(plan: ExperimentPlan) -> ExperimentResult:
     off (the default) records are bit-identical to pre-obs builds.
     """
     obs = getattr(plan.spec, "obs", None)
+    cell_batch = getattr(plan.spec.placement, "cell_batch", False)
     if obs is None or not obs.enabled:
         caches: dict = {}
+        if cell_batch:
+            return ExperimentResult(plan=plan,
+                                    outcomes=_execute_cellbatched(plan,
+                                                                  caches))
         outcomes = [_execute_cell(cell, caches) for cell in plan.cells]
         return ExperimentResult(plan=plan, outcomes=outcomes)
+    if cell_batch:
+        # per-cell CompileWatch/metrics attribution needs one dispatch per
+        # cell; keep the obs contract and run the matrix unbatched
+        print("# obs axis enabled: cell batching falls back to per-cell "
+              "execution")
     return _execute_observed(plan, obs)
 
 
@@ -276,6 +286,115 @@ def _execute_synthetic_cell(cell: PlannedCell, caches: dict) -> CellOutcome:
     rec.update(base, metric_name="objective",
                final_metric=rec["final_objective"])
     return CellOutcome(cell, rec, result)
+
+
+# ---------------------------------------------------------------------------
+# Cell batching: compatible cells -> one compiled program (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+# strategies whose hot path is the batched_scan_gd/prox runner — the only
+# ones where stacking cells along the realization axis is a pure reshape
+_CELLBATCH_STRATEGIES = ("coded-gd", "coded-prox", "uncoded", "replication")
+
+
+def _freeze(v):
+    try:
+        hash(v)
+    except TypeError:
+        return id(v)
+    return v
+
+
+def _cellbatch_key(cell: PlannedCell):
+    """Group key for one cell, or None when the cell must run on its own.
+
+    Cells in one group share the compiled program, so everything that
+    shapes or re-parameterizes it is in the key: problem identity, strategy,
+    encoder config, m, steps, trials, eval_every, seed, extra options.
+    Delay model / compute time / policy / k / step size are FREE axes —
+    they only change the sampled schedules and the per-realization step
+    vector.
+    """
+    if (cell.kind == "workload" or cell.skip is not None
+            or cell.placement != "vmap"
+            or cell.resolved_strategy not in _CELLBATCH_STRATEGIES):
+        return None
+    st = cell.strategy
+    opts = tuple(sorted((k, _freeze(v)) for k, v in st.options
+                        if k != "step_size"))
+    return (cell.resolved_strategy, id(cell.problem), cell.m, cell.steps,
+            cell.trials, cell.eval_every, cell.seed, _freeze(st.encoder),
+            opts)
+
+
+def _cell_cfg(cell: PlannedCell) -> dict:
+    """The per-cell strategy config, exactly as ``_execute_synthetic_cell``
+    builds it for the sync-gradient family."""
+    st = cell.strategy
+    cfg = st.options_dict()
+    if cell.resolved_strategy.startswith("coded"):
+        cfg.setdefault("encoder", st.encoder if st.encoder is not None
+                       else "hadamard")
+    cfg.setdefault("policy", resolve_policy(
+        st.policy or "fastest-k", cell.m, cell.k,
+        deadline=st.deadline, beta=st.policy_beta))
+    return cfg
+
+
+def _execute_cell_group(cells: list, caches: dict) -> list:
+    """One compiled program for a group of compatible cells; any
+    incompatibility the strategy detects at run time falls back to the
+    per-cell path (same records, minus the sharing)."""
+    from repro.runtime.strategies import get_strategy
+    spec_ = _synthetic_problem(cells[0], caches)
+    engines = [_engine(cell) for cell in cells]
+    cfgs = [_cell_cfg(cell) for cell in cells]
+    strat = get_strategy(cells[0].resolved_strategy)
+    try:
+        results = strat.run_cellbatched(
+            spec_, engines, steps=cells[0].steps, trials=cells[0].trials,
+            eval_every=cells[0].eval_every, cfgs=cfgs)
+    except ValueError as e:
+        print(f"# cell batch of {len(cells)} "
+              f"{cells[0].resolved_strategy} cells fell back to per-cell "
+              f"execution: {e}")
+        return [_execute_cell(cell, caches) for cell in cells]
+    outcomes = []
+    for cell, result in zip(cells, results):
+        base = {"strategy": cell.resolved_strategy, "delay": cell.delay,
+                "n": spec_.n, "p": spec_.p, "m": cell.m, "k": cell.k,
+                "seed": cell.seed}
+        if cell.trials == 1:
+            # single-trial cells report the RunResult schema (scalar trace
+            # rows), like the unbatched executor; the batching marker stays
+            one = result.realization(0)
+            for key in ("trials", "eval_every", "batched"):
+                one.meta.pop(key, None)
+            rec = one.to_record()
+            result = one
+        else:
+            rec = result.to_record()
+        rec.update(base, metric_name="objective",
+                   final_metric=rec["final_objective"])
+        outcomes.append(CellOutcome(cell, rec, result))
+    return outcomes
+
+
+def _execute_cellbatched(plan: ExperimentPlan, caches: dict) -> list:
+    """Group compatible cells, run each group as one program, and return
+    outcomes in plan order."""
+    groups: dict = {}
+    for cell in plan.cells:
+        groups.setdefault(_cellbatch_key(cell), []).append(cell)
+    by_index: dict = {}
+    for key, cells in groups.items():
+        if key is None or len(cells) == 1:
+            for cell in cells:
+                by_index[cell.index] = _execute_cell(cell, caches)
+        else:
+            for cell, oc in zip(cells, _execute_cell_group(cells, caches)):
+                by_index[cell.index] = oc
+    return [by_index[cell.index] for cell in plan.cells]
 
 
 def _workload_data(cell: PlannedCell, wl, ps, caches: dict):

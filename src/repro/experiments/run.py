@@ -66,7 +66,9 @@ def build_spec(args: argparse.Namespace) -> ExperimentSpec:
                          compute_time=args.compute_time),
         trials=TrialsAxis(trials=args.trials, eval_every=args.eval_every,
                           seed=args.seed),
-        placement=PlacementAxis(mode=args.placement),
+        placement=PlacementAxis(mode=args.placement,
+                                cell_batch=getattr(args, "cell_batch",
+                                                   False)),
         steps=args.steps, obs=obs)
 
 
@@ -140,6 +142,10 @@ def main(argv: Sequence[str] | None = None) -> ExperimentResult:
     # triple (in build_spec), workload matrices their native paper models —
     # while an EXPLICIT --delays always wins, workload or not
     add_axis_flags(ap, delays=None)
+    ap.add_argument("--cell-batch", action="store_true",
+                    help="stack compatible matrix cells (same problem/"
+                         "strategy/shape, differing delay/policy/step size) "
+                         "into one compiled program (vmap placement only)")
     ap.add_argument("--plan-only", action="store_true",
                     help="print the resolved cell list and exit")
     ap.add_argument("--out", default="runs/experiments")

@@ -150,9 +150,18 @@ class PlacementAxis:
       device mesh on a ``trials`` axis, vmapped within each shard; falls
       back to ``vmap`` when one device is present or R is not divisible
       by the device count.
+
+    ``cell_batch=True`` (opt-in, ``mode='vmap'`` only) additionally stacks
+    COMPATIBLE cells of the matrix — same problem, strategy, encoder
+    config, worker count, step budget and trial count, differing only in
+    delay model / policy / step size — into one compiled program along the
+    realization axis (``Strategy.run_cellbatched``), so the matrix runs
+    device-resident instead of re-entering jit per cell.  Incompatible
+    cells and obs-enabled runs fall back to per-cell execution.
     """
     mode: str = "vmap"
     mesh_axis: str = "trials"
+    cell_batch: bool = False
 
     def validate(self) -> None:
         if self.mode not in PLACEMENTS:

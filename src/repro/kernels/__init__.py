@@ -1,7 +1,10 @@
 """Pallas TPU kernels (validated in interpret mode on CPU).
 
 fwht: the paper's FWHT transform (§4.2.2); encode: the fused sign-flip +
-FWHT + row-gather SRHT encode; coded_reduce: fused coded gradient combine.
-ops.py holds the jit'd public wrappers; ref.py the jnp oracles.
+FWHT + row-gather SRHT encode; coded_reduce: fused coded gradient combine;
+fused_step: the fused masked-gradient megakernel (matvec + erasure mask +
+decode-weighted combine in one pass).  ops.py holds the jit'd public
+wrappers; ref.py the jnp oracles.
 """
-from .ops import fwht, hadamard_encode, srht_encode, coded_combine, on_tpu
+from .ops import (fwht, hadamard_encode, srht_encode, coded_combine, on_tpu,
+                  fused_masked_gradient, fused_enabled)

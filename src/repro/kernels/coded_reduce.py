@@ -7,6 +7,13 @@ scale and reduction avoids materializing the (m, P) weighted intermediate
 in HBM: the tile is weighted and reduced in VMEM in one pass.
 
 Grid over P blocks; the worker axis (m <= 32) rides along the sublane dim.
+
+Layout is resolved ONCE per gradient width (``combine_layout``, lru-cached):
+instead of zero-padding P up to a block multiple on every call, the block
+width snaps to the largest divisor of P under the cap, so for any realistic
+P the kernel tiles the array exactly and the per-step pad disappears from
+the traced program.  Padding only survives as a last resort when the best
+divisor is lane-hostile (< 128) — e.g. a large prime P.
 """
 from __future__ import annotations
 
@@ -18,7 +25,23 @@ from jax.experimental import pallas as pl
 
 from .fwht import default_interpret
 
-__all__ = ["coded_combine_call"]
+__all__ = ["coded_combine_call", "combine_layout"]
+
+
+@functools.lru_cache(maxsize=None)
+def combine_layout(P: int, block: int = 2048) -> tuple[int, int]:
+    """(block_width, pad) for a width-P combine.  pad == 0 whenever P has a
+    divisor in [128, block] (always true for the power-of-two-ish widths
+    encoders produce) — the pad then never enters the traced program."""
+    bp = min(block, P)
+    if P % bp == 0:
+        return bp, 0
+    d = bp
+    while P % d:
+        d -= 1
+    if d >= 128:
+        return d, 0
+    return bp, (-P) % bp
 
 
 def _combine_body(g_ref, c_ref, o_ref):
@@ -30,18 +53,20 @@ def _combine_body(g_ref, c_ref, o_ref):
 @functools.partial(jax.jit, static_argnames=("interpret", "block"))
 def coded_combine_call(g: jax.Array, c: jax.Array, *, block: int = 2048,
                        interpret: bool | None = None) -> jax.Array:
-    """g: (m, P) worker gradients; c: (m,) decode weights -> (P,).
+    """g: (m, P) worker gradients; c: (m,) or (m, 1) decode weights -> (P,).
 
     interpret=None (default) picks the mode from the backend: compiled
-    Mosaic on TPU, interpreted elsewhere (the ``fwht.py`` policy).  A P that
-    is not a block multiple is zero-padded to one — the pad lanes combine to
-    zeros that are sliced away, so any gradient width is accepted.
+    Mosaic on TPU, interpreted elsewhere (the ``fwht.py`` policy).  Callers
+    on the hot path (``core.data_parallel._masked_mean``) hand c already
+    shaped (m, 1) so no per-step reshape is traced; the 1-D form is kept
+    for API compatibility.
     """
     if interpret is None:
         interpret = default_interpret()
     m, P = g.shape
-    bp = min(block, P)
-    pad = (-P) % bp
+    if c.ndim == 1:
+        c = c[:, None]
+    bp, pad = combine_layout(P, block)
     if pad:
         g = jnp.pad(g, ((0, 0), (0, pad)))
     padded = P + pad
@@ -53,5 +78,5 @@ def coded_combine_call(g: jax.Array, c: jax.Array, *, block: int = 2048,
         out_specs=pl.BlockSpec((1, bp), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, padded), g.dtype),
         interpret=interpret,
-    )(g, c[:, None])
-    return out[0, :P]
+    )(g, c)
+    return out[0, :P] if pad else out[0]

@@ -13,10 +13,11 @@ import numpy as np
 
 from .coded_reduce import coded_combine_call
 from .encode import srht_encode_call
+from .fused_step import fused_enabled, fused_masked_gradient
 from .fwht import fwht_kernel_call
 
 __all__ = ["on_tpu", "fwht", "hadamard_encode", "srht_encode",
-           "coded_combine"]
+           "coded_combine", "fused_masked_gradient", "fused_enabled"]
 
 
 def on_tpu() -> bool:

@@ -38,6 +38,7 @@ from jax.sharding import Mesh, PartitionSpec
 from repro.core.data_parallel import (EncodedProblem, masked_gradient,
                                       original_objective, prox_l1)
 from repro.core.model_parallel import LiftedProblem
+from repro.kernels.fused_step import fused_enabled, fused_masked_gradient
 from repro.obs.trace import current_recorder as _obs_recorder
 
 __all__ = [
@@ -67,15 +68,33 @@ def _traced_call(name: str, fn, *args, **kw):
 # Shared per-step math (single source of truth for fused + batched runners)
 # ---------------------------------------------------------------------------
 
+def _masked_grad(prob: EncodedProblem, w, mask):
+    """The per-step masked gradient: the fused Pallas megakernel
+    (``kernels/fused_step.py`` — matvec + erasure + combine in one VMEM
+    pass) when ``fused_enabled()`` (TPU default, ``REPRO_FUSED`` override),
+    the dense-einsum path of ``core.data_parallel`` everywhere else.  The
+    branch is trace-time, so each compiled runner bakes in one path."""
+    if fused_enabled():
+        return fused_masked_gradient(prob.SX, prob.Sy, w, mask,
+                                     n=prob.n, beta=prob.beta)
+    return masked_gradient(prob, w, mask)
+
+
+def _runner_name(base: str) -> str:
+    """Obs span name for a runner dispatch; the fused megakernel path is
+    called out so traces distinguish it from the dense step."""
+    return base + ":fused" if fused_enabled() else base
+
+
 def _gd_step(prob: EncodedProblem, w, mask, step_size, h: str):
-    g = masked_gradient(prob, w, mask)
+    g = _masked_grad(prob, w, mask)
     if h == "l2":
         g = g + prob.lam * w
     return w - step_size * g
 
 
 def _prox_step(prob: EncodedProblem, w, mask, step_size):
-    g = masked_gradient(prob, w, mask)
+    g = _masked_grad(prob, w, mask)
     return prox_l1(w - step_size * g, step_size * prob.lam)
 
 
@@ -127,37 +146,39 @@ def _strided_scan(step, evalf, carry0, xs, eval_every: int):
 # Single-realization fused runners
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("h",))
+@partial(jax.jit, static_argnames=("h", "eval_every"))
 def _scan_gd(prob: EncodedProblem, masks: jax.Array, step_size,
-             w0: jax.Array, h: str = "l2"):
+             w0: jax.Array, h: str = "l2", eval_every: int = 1):
     return _strided_scan(lambda w, mask: _gd_step(prob, w, mask, step_size, h),
                          lambda w: original_objective(prob, w, h=h),
-                         w0, masks, 1)
+                         w0, masks, eval_every)
 
 
 def scan_gd(prob: EncodedProblem, masks: jax.Array, step_size,
-            w0: jax.Array, h: str = "l2"):
+            w0: jax.Array, h: str = "l2", eval_every: int = 1):
     """Encoded GD over a (T, m) mask schedule, fused into one scan.
 
     Returns (w_T, trace) with trace[t] = f(w_{t+1}) on the original problem —
-    the same convention as the legacy per-step loop.
+    the same convention as the legacy per-step loop (``eval_every=s``
+    strides the trace like the batched runners).
     """
-    return _traced_call("runner:gd", _scan_gd, prob, masks, step_size, w0,
-                        h=h)
+    return _traced_call(_runner_name("runner:gd"), _scan_gd, prob, masks,
+                        step_size, w0, h=h, eval_every=eval_every)
 
 
-@jax.jit
+@partial(jax.jit, static_argnames=("eval_every",))
 def _scan_prox(prob: EncodedProblem, masks: jax.Array, step_size,
-               w0: jax.Array):
+               w0: jax.Array, eval_every: int = 1):
     return _strided_scan(lambda w, mask: _prox_step(prob, w, mask, step_size),
                          lambda w: original_objective(prob, w, h="l1"),
-                         w0, masks, 1)
+                         w0, masks, eval_every)
 
 
 def scan_prox(prob: EncodedProblem, masks: jax.Array, step_size,
-              w0: jax.Array):
+              w0: jax.Array, eval_every: int = 1):
     """Encoded proximal gradient (ISTA, l1) over a mask schedule."""
-    return _traced_call("runner:prox", _scan_prox, prob, masks, step_size, w0)
+    return _traced_call(_runner_name("runner:prox"), _scan_prox, prob, masks,
+                        step_size, w0, eval_every=eval_every)
 
 
 # LiftedProblem carries Python callables (phi), so the scan cannot be jitted
@@ -196,21 +217,22 @@ def scan_bcd(prob: LiftedProblem, masks: jax.Array, step_size,
                         jnp.asarray(step_size, prob.XS.dtype), v0)
 
 
-@partial(jax.jit, static_argnames=("buffer_size", "h"))
+@partial(jax.jit, static_argnames=("buffer_size", "h", "eval_every"))
 def _scan_async(prob: EncodedProblem, workers: jax.Array,
                 staleness: jax.Array, step_size, w0: jax.Array,
-                buffer_size: int, h: str = "l2"):
+                buffer_size: int, h: str = "l2", eval_every: int = 1):
     buf0 = jnp.tile(w0[None], (buffer_size, 1))
     (w_final, _, _), trace = _strided_scan(
         lambda c, ev: _async_step(prob, c, ev, step_size, buffer_size, h),
         lambda c: original_objective(prob, c[0], h=h),
         (w0, buf0, jnp.int32(0)),
-        (workers.astype(jnp.int32), staleness.astype(jnp.int32)), 1)
+        (workers.astype(jnp.int32), staleness.astype(jnp.int32)), eval_every)
     return w_final, trace
 
 
 def scan_async(prob: EncodedProblem, workers: jax.Array, staleness: jax.Array,
-               step_size, w0: jax.Array, buffer_size: int, h: str = "l2"):
+               step_size, w0: jax.Array, buffer_size: int, h: str = "l2",
+               eval_every: int = 1):
     """Asynchronous stale-gradient SGD over a per-arrival event stream.
 
     workers[u]   — which worker's gradient lands at update u;
@@ -223,22 +245,31 @@ def scan_async(prob: EncodedProblem, workers: jax.Array, staleness: jax.Array,
     estimate of the full gradient.
     """
     return _traced_call("runner:async", _scan_async, prob, workers, staleness,
-                        step_size, w0, buffer_size=buffer_size, h=h)
+                        step_size, w0, buffer_size=buffer_size, h=h,
+                        eval_every=eval_every)
 
 
 # ---------------------------------------------------------------------------
 # Batched-trial runners: vmap over the leading realization axis
 # ---------------------------------------------------------------------------
 
+def _step_vector(step_size, R: int):
+    """Per-realization step sizes: a scalar broadcasts to all R, a (R,)
+    vector (the cell-batching path — C cells x R trials stacked) passes
+    through.  Scalar broadcast is value-identical to the old closed-over
+    Python float (same f32 rounding in ``w - step * g``)."""
+    return jnp.broadcast_to(jnp.asarray(step_size, jnp.float32), (R,))
+
+
 def _batched_gd(prob: EncodedProblem, masks: jax.Array, step_size,
                 w0: jax.Array, h: str = "l2", eval_every: int = 1):
-    def one(masks_r, w0_r):
+    def one(masks_r, w0_r, step_r):
         return _strided_scan(
-            lambda w, mask: _gd_step(prob, w, mask, step_size, h),
+            lambda w, mask: _gd_step(prob, w, mask, step_r, h),
             lambda w: original_objective(prob, w, h=h),
             w0_r, masks_r, eval_every)
 
-    return jax.vmap(one)(masks, w0)
+    return jax.vmap(one)(masks, w0, _step_vector(step_size, masks.shape[0]))
 
 
 @partial(jax.jit, static_argnames=("h", "eval_every"), donate_argnums=(3,))
@@ -247,28 +278,57 @@ def _batched_scan_gd(prob: EncodedProblem, masks: jax.Array, step_size,
     return _batched_gd(prob, masks, step_size, w0, h, eval_every)
 
 
+# R == 1 wrappers: the squeeze/unsqueeze happens INSIDE one traced program
+# (free at runtime) — host-side masks[0] / w[None] reshapes around _scan_gd
+# would cost several extra dispatches per call, eating the win
+@partial(jax.jit, static_argnames=("h", "eval_every"), donate_argnums=(3,))
+def _scan_gd_r1(prob: EncodedProblem, masks: jax.Array, step_size,
+                w0: jax.Array, h: str = "l2", eval_every: int = 1):
+    w, tr = _scan_gd(prob, masks[0], jnp.asarray(step_size).reshape(()),
+                     w0[0], h=h, eval_every=eval_every)
+    return w[None], tr[None]
+
+
+@partial(jax.jit, static_argnames=("eval_every",), donate_argnums=(3,))
+def _scan_prox_r1(prob: EncodedProblem, masks: jax.Array, step_size,
+                  w0: jax.Array, eval_every: int = 1):
+    w, tr = _scan_prox(prob, masks[0], jnp.asarray(step_size).reshape(()),
+                       w0[0], eval_every=eval_every)
+    return w[None], tr[None]
+
+
 def batched_scan_gd(prob: EncodedProblem, masks: jax.Array, step_size,
                     w0: jax.Array, h: str = "l2", eval_every: int = 1):
     """R realizations of encoded GD in one compiled program.
 
     masks: (R, T, m) stacked schedules; w0: (R, p) per-realization starts
-    (donated — hand a fresh stack per call).  Returns (w (R, p),
+    (donated — hand a fresh stack per call).  ``step_size`` may be a scalar
+    or a per-realization (R,) vector.  Returns (w (R, p),
     trace (R, T // eval_every)) with trace[r, j] = f(w after step
     (j+1)*eval_every) of realization r.
+
+    R == 1 routes through the single-trial scan (no vmap axis): batching a
+    lone realization only adds overhead (BENCH_trials.json showed 0.79x),
+    and the result is identical by construction.
     """
-    return _traced_call("runner:batched_gd", _batched_scan_gd, prob, masks,
-                        step_size, w0, h=h, eval_every=eval_every)
+    if masks.shape[0] == 1:
+        return _traced_call(_runner_name("runner:gd"), _scan_gd_r1, prob,
+                            masks, step_size, w0, h=h,
+                            eval_every=eval_every)
+    return _traced_call(_runner_name("runner:batched_gd"), _batched_scan_gd,
+                        prob, masks, step_size, w0, h=h,
+                        eval_every=eval_every)
 
 
 def _batched_prox(prob: EncodedProblem, masks: jax.Array, step_size,
                   w0: jax.Array, eval_every: int = 1):
-    def one(masks_r, w0_r):
+    def one(masks_r, w0_r, step_r):
         return _strided_scan(
-            lambda w, mask: _prox_step(prob, w, mask, step_size),
+            lambda w, mask: _prox_step(prob, w, mask, step_r),
             lambda w: original_objective(prob, w, h="l1"),
             w0_r, masks_r, eval_every)
 
-    return jax.vmap(one)(masks, w0)
+    return jax.vmap(one)(masks, w0, _step_vector(step_size, masks.shape[0]))
 
 
 @partial(jax.jit, static_argnames=("eval_every",), donate_argnums=(3,))
@@ -280,9 +340,15 @@ def _batched_scan_prox(prob: EncodedProblem, masks: jax.Array, step_size,
 def batched_scan_prox(prob: EncodedProblem, masks: jax.Array, step_size,
                       w0: jax.Array, eval_every: int = 1):
     """R realizations of encoded ISTA in one compiled program (see
-    ``batched_scan_gd`` for the axis/donation/eval_every conventions)."""
-    return _traced_call("runner:batched_prox", _batched_scan_prox, prob,
-                        masks, step_size, w0, eval_every=eval_every)
+    ``batched_scan_gd`` for the axis/donation/eval_every/R==1
+    conventions)."""
+    if masks.shape[0] == 1:
+        return _traced_call(_runner_name("runner:prox"), _scan_prox_r1,
+                            prob, masks, step_size, w0,
+                            eval_every=eval_every)
+    return _traced_call(_runner_name("runner:batched_prox"),
+                        _batched_scan_prox, prob, masks, step_size, w0,
+                        eval_every=eval_every)
 
 
 @lru_cache(maxsize=8)
@@ -314,7 +380,13 @@ def batched_scan_bcd(prob: LiftedProblem, masks: jax.Array, step_size,
     trace[r, j] = phi(z after commit (j+1)*eval_every), i.e. with
     eval_every=1 it equals ``scan_bcd``'s trace[1:] — the slice every
     strategy reports anyway.
+
+    R == 1 (at eval_every=1, where the trace conventions coincide) routes
+    through the single-trial scan like ``batched_scan_gd``.
     """
+    if masks.shape[0] == 1 and eval_every == 1:
+        v, tr = scan_bcd(prob, masks[0], step_size, v0[0])
+        return v[None], tr[None, 1:]
     run = _bcd_batched_runner(prob.phi_val, prob.phi_grad)
     return _traced_call("runner:batched_bcd", run, prob.XS, masks,
                         jnp.asarray(step_size, prob.XS.dtype), v0,
@@ -352,8 +424,15 @@ def batched_scan_async(prob: EncodedProblem, workers: jax.Array,
     """R realizations of async stale-gradient SGD in one compiled program.
 
     workers/staleness: (R, U) stacked event streams; w0: (R, p) (donated).
-    Returns (w (R, p), trace (R, U // eval_every)).
+    Returns (w (R, p), trace (R, U // eval_every)).  R == 1 routes through
+    the single-trial scan (see ``batched_scan_gd``).
     """
+    if workers.shape[0] == 1:
+        w, tr = _traced_call("runner:async", _scan_async, prob, workers[0],
+                             staleness[0], step_size, w0[0],
+                             buffer_size=buffer_size, h=h,
+                             eval_every=eval_every)
+        return w[None], tr[None]
     return _traced_call("runner:batched_async", _batched_scan_async, prob,
                         workers, staleness, step_size, w0,
                         buffer_size=buffer_size, h=h, eval_every=eval_every)

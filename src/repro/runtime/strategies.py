@@ -415,6 +415,68 @@ class _SyncGradientStrategy(Strategy):
             objective=np.asarray(tr), w=np.asarray(w),
             meta=meta, schedules=batch)
 
+    def run_cellbatched(self, spec, engines, *, steps=200, trials=1,
+                        eval_every=1, cfgs=None):
+        """C compatible cells of a matrix as ONE compiled program.
+
+        ``engines[ci]`` / ``cfgs[ci]`` carry cell ci's cluster (delay model,
+        seed) and config; cells may differ in policy, delay, and
+        ``step_size`` but must share the problem, encoder config, worker
+        count and step budget (``experiments.execute`` groups under exactly
+        those rules).  The problem is encoded ONCE, the C x R schedule
+        stacks are concatenated along the realization axis, and one
+        ``batched_scan_*`` call runs the whole stack — step sizes ride a
+        per-realization vector through the runner's vmap.  Returns one
+        ``TrialsResult`` per cell (meta gains ``cell_batched: C``), each
+        matching its ``run_batched`` equivalent to float rounding.
+        """
+        C = len(engines)
+        cfgs = [dict(c) for c in (cfgs if cfgs is not None else [{}] * C)]
+        if len(cfgs) != C:
+            raise ValueError(f"{C} engines but {len(cfgs)} cfgs")
+        check_trials(steps, trials, eval_every)
+        stride_every = resolve_eval_every(steps, eval_every)
+        ms = {e.m for e in engines}
+        if len(ms) > 1:
+            raise ValueError(f"cell batch mixes worker counts {sorted(ms)}")
+        policies = [self._policy(e, cfg) for e, cfg in zip(engines, cfgs)]
+        enc, prob = self._problem(spec, engines[0], cfgs[0])
+        for cfg in cfgs[1:]:     # the shared encode consumed cfgs[0]'s keys
+            for key in ("encoder", "beta", "encoder_seed"):
+                cfg.pop(key, None)
+        step_sizes = [cfg.pop("step_size", None) or _auto_step(spec)
+                      for cfg in cfgs]
+        w0s = [jnp.asarray(cfg.pop("w0", np.zeros(spec.p)), jnp.float32)
+               for cfg in cfgs]
+        batches = [e.sample_schedules(steps, pol, trials)
+                   for e, pol in zip(engines, policies)]
+        masks = jnp.concatenate([jnp.asarray(b.masks) for b in batches])
+        w0 = jnp.concatenate([jnp.tile(w[None], (trials, 1)) for w in w0s])
+        step_vec = jnp.repeat(jnp.asarray(step_sizes, jnp.float32), trials)
+        if spec.h == "l1":
+            w, tr = batched_scan_prox(prob, masks, step_vec, w0,
+                                      eval_every=stride_every)
+        else:
+            w, tr = batched_scan_gd(prob, masks, step_vec, w0, h=spec.h,
+                                    eval_every=stride_every)
+        w, tr = np.asarray(w), np.asarray(tr)
+        results = []
+        for ci in range(C):
+            sl = slice(ci * trials, (ci + 1) * trials)
+            batch = batches[ci]
+            results.append(TrialsResult(
+                strategy=self.name,
+                times=batch.times[:, stride_every - 1::stride_every],
+                objective=tr[sl], w=w[sl],
+                meta={"encoder": enc.name, "beta": enc.beta,
+                      "policy": type(policies[ci]).__name__,
+                      "step_size": step_sizes[ci], "trials": trials,
+                      "eval_every": eval_every, "batched": True,
+                      "cell_batched": C,
+                      "mean_active": float(batch.masks.sum(-1).mean())},
+                schedules=batch))
+        return results
+
 
 @register_strategy("coded-gd")
 class CodedGD(_SyncGradientStrategy):
@@ -436,6 +498,14 @@ class CodedProx(_SyncGradientStrategy):
             raise ValueError("coded-prox requires an l1 ProblemSpec")
         return super().run_batched(spec, engine, steps=steps, trials=trials,
                                    eval_every=eval_every, **cfg)
+
+    def run_cellbatched(self, spec, engines, *, steps=200, trials=1,
+                        eval_every=1, cfgs=None):
+        if spec.h != "l1":
+            raise ValueError("coded-prox requires an l1 ProblemSpec")
+        return super().run_cellbatched(spec, engines, steps=steps,
+                                       trials=trials, eval_every=eval_every,
+                                       cfgs=cfgs)
 
 
 @register_strategy("uncoded")
