@@ -28,7 +28,7 @@ from repro.experiments import (DelayAxis, ExperimentSpec, PlacementAxis,
                                ProblemAxis, StrategyAxis, TrialsAxis,
                                execute, plan)
 
-from .common import emit
+from .common import bench_meta, emit
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_OUT = os.path.join(_ROOT, "BENCH_experiments.json")
@@ -47,10 +47,11 @@ def _spec(placement: str, trials: int, steps: int) -> ExperimentSpec:
 
 def _time_execute(spec: ExperimentSpec, iters: int) -> tuple[float, list]:
     pl = plan(spec)
-    execute(pl)                               # warm the jit caches
+    # record_to=False keeps manifest I/O out of the timed loop
+    execute(pl, record_to=False)              # warm the jit caches
     t0 = time.perf_counter()
     for _ in range(iters):
-        result = execute(pl)
+        result = execute(pl, record_to=False)
     return (time.perf_counter() - t0) / iters, result.records
 
 
@@ -85,6 +86,7 @@ def run(trials: int = 16, steps: int = 40, iters: int = 3,
     with open(out_json, "w") as f:
         json.dump({"bench": "experiment placement axis (ridge smoke, "
                             "coded-gd)",
+                   "meta": bench_meta(),
                    "backend": jax.default_backend(), "devices": ndev,
                    "results": results}, f, indent=1)
     print(f"# wrote {out_json}")

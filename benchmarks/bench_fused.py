@@ -160,11 +160,13 @@ def _time_matrix(spec, iters: int):
     that)."""
     from repro.experiments import execute, plan
     pl = plan(spec)
-    result = execute(pl)                       # warm the jit caches
+    # record_to=False: manifest writes (git subprocess + json) must not
+    # land inside the timed loop or pollute the run store with warm-ups
+    result = execute(pl, record_to=False)      # warm the jit caches
     secs = float("inf")
     for _ in range(iters):
         t0 = time.perf_counter()
-        result = execute(pl)
+        result = execute(pl, record_to=False)
         secs = min(secs, time.perf_counter() - t0)
     traces = np.stack([np.asarray(r["objective"], dtype=float)
                        for r in result.records])
@@ -215,10 +217,13 @@ def run(smoke: bool = False, iters: int = 3,
     import jax
     from repro.kernels.fused_step import fused_enabled
 
+    from .common import bench_meta
+
     kernel = bench_kernel(smoke, iters=max(iters, 3))
     matrix = bench_matrix(smoke, iters=iters)
     out = {
         "bench": "fused masked-gradient path (kernel + R=16 ridge matrix)",
+        "meta": bench_meta(),
         "backend": jax.default_backend(),
         "fused_runner_path": fused_enabled(),
         "devices": len(jax.devices()),

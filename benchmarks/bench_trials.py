@@ -26,7 +26,7 @@ from repro.runtime import ClusterEngine, FastestK, make_delay_model
 from repro.runtime.runners import batched_scan_gd, scan_gd
 from repro.workloads import get_workload
 
-from .common import emit, time_us
+from .common import bench_meta, emit, time_us
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_OUT = os.path.join(_ROOT, "BENCH_trials.json")
@@ -98,6 +98,7 @@ def run(trials=(1, 4, 16, 64), iters: int = 3, preset: str = "smoke",
     os.makedirs(os.path.dirname(os.path.abspath(out_json)), exist_ok=True)
     with open(out_json, "w") as f:
         json.dump({"bench": "batched-trials (ridge smoke, scan_gd)",
+                   "meta": bench_meta(),
                    "backend": _backend(), "results": results}, f, indent=1)
     print(f"# wrote {out_json}")
     return results

@@ -3,6 +3,8 @@
 The timing/blocking helpers live in :mod:`repro.obs.timing` (the ONE
 clock/blocking discipline, DESIGN.md §11); this module re-exports them so
 every ``benchmarks/bench_*.py`` keeps its historical import path.
+:func:`bench_meta` is the provenance stamp every ``BENCH_*.json`` carries
+so ``repro.obs.diff --against-baseline`` can say WHAT is being compared.
 """
 from __future__ import annotations
 
@@ -11,7 +13,17 @@ from repro.obs.timing import block, emit, time_us
 # historical alias — bench scripts (and out-of-tree users) call _block
 _block = block
 
-__all__ = ["block", "_block", "time_us", "emit", "masks_from_delays"]
+__all__ = ["block", "_block", "time_us", "emit", "masks_from_delays",
+           "bench_meta"]
+
+
+def bench_meta() -> dict:
+    """The provenance stamp for a ``BENCH_*.json``: git sha, backend, jax
+    version, device count, ISO-8601 UTC timestamp (``repro.obs.runstore``
+    is the one definition).  ``repro.obs.diff`` skips the ``meta`` subtree
+    when aligning time-like leaves, so restamping never flags."""
+    from repro.obs.runstore import provenance
+    return provenance()
 
 
 def masks_from_delays(model, m, k, steps, seed=0):

@@ -3,6 +3,10 @@
 Prints ``name,us_per_call,derived`` CSV lines.  Roofline terms come from the
 dry-run artifacts (launch/dryrun.py writes JSON; benchmarks/roofline.py
 renders the table) since they require the 512-device process.
+
+Every invocation also records one ``kind="bench"`` manifest (suite list,
+per-suite seconds, failures, provenance) into the run store — disable via
+``REPRO_RUNSTORE=0`` (see ``repro.obs.runstore``).
 """
 from __future__ import annotations
 
@@ -10,11 +14,29 @@ import sys
 import time
 
 
+def _record_suite_manifest(suite_rows: list, total_s: float) -> None:
+    """Best-effort run-store manifest for the whole suite invocation."""
+    try:
+        from repro.obs.runstore import default_store
+        store = default_store()
+        if store is None:
+            return
+        run_id = store.record({
+            "kind": "bench",
+            "label": "benchmarks.run suite",
+            "suites": suite_rows,
+            "total_s": total_s,
+        })
+        print(f"# recorded bench run {run_id} in {store.root}")
+    except Exception as e:  # noqa: BLE001
+        print(f"# runstore: suite manifest not recorded: {e}")
+
+
 def main() -> None:
     from . import (bench_spectrum, bench_ridge, bench_lasso, bench_logistic,
                    bench_matrix_factorization, bench_kernels, bench_coded_lm,
                    bench_runtime, bench_encoding, bench_trials,
-                   bench_experiments, bench_fused)
+                   bench_experiments, bench_fused, perf_iter)
     print("name,us_per_call,derived")
     suites = [
         ("spectrum (paper Figs 5-6)", bench_spectrum.run),
@@ -32,19 +54,29 @@ def main() -> None:
          bench_experiments.run),
         ("fused masked-gradient path: kernel + cell-batched matrix "
          "(DESIGN §12)", bench_fused.run),
+        ("perf-iter roofline dry-run (512-device subprocess)",
+         perf_iter.run),
     ]
     t_all = time.time()
+    suite_rows = []
     for title, fn in suites:
         print(f"# --- {title} ---", flush=True)
         t0 = time.time()
+        status = "ok"
         try:
             fn()
         except Exception as e:  # noqa: BLE001
             print(f"{title.split()[0]}_FAILED,0.0,{e!r}", flush=True)
             import traceback
             traceback.print_exc()
-        print(f"# ({title}: {time.time() - t0:.1f}s)", flush=True)
-    print(f"# total: {time.time() - t_all:.1f}s")
+            status = f"failed: {e!r}"
+        secs = time.time() - t0
+        suite_rows.append({"suite": title, "seconds": secs,
+                           "status": status})
+        print(f"# ({title}: {secs:.1f}s)", flush=True)
+    total_s = time.time() - t_all
+    print(f"# total: {total_s:.1f}s")
+    _record_suite_manifest(suite_rows, total_s)
 
 
 if __name__ == "__main__":

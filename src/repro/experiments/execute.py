@@ -112,6 +112,7 @@ class ExperimentResult:
     plan: ExperimentPlan
     outcomes: list
     recorder: Any = None
+    run_id: str | None = None      # run-store id when the run was recorded
 
     @property
     def spec(self) -> ExperimentSpec:
@@ -144,7 +145,7 @@ def cell_label(cell: PlannedCell) -> str:
     return f"{prefix}{cell.resolved_strategy}x{cell.delay}"
 
 
-def execute(plan: ExperimentPlan) -> ExperimentResult:
+def execute(plan: ExperimentPlan, *, record_to=None) -> ExperimentResult:
     """Run every planned cell; never aborts mid-matrix for per-cell
     incompatibilities (those become skip-with-reason records).
 
@@ -154,23 +155,56 @@ def execute(plan: ExperimentPlan) -> ExperimentResult:
     split) plus an ``obs`` per-cell metrics summary, and ``obs.trace`` /
     ``obs.profile`` write the trace / profiler artifacts.  With the axis
     off (the default) records are bit-identical to pre-obs builds.
+
+    Every run additionally leaves a provenance manifest in the run store
+    (``repro.obs.runstore``) — ``record_to`` controls where: ``None`` uses
+    the ``REPRO_RUNSTORE``-governed default store, ``False`` skips
+    recording (benchmark timing loops), a :class:`RunStore` or path
+    records there.  The manifest is a side artifact; the returned records
+    are unaffected.
     """
     obs = getattr(plan.spec, "obs", None)
     cell_batch = getattr(plan.spec.placement, "cell_batch", False)
     if obs is None or not obs.enabled:
         caches: dict = {}
         if cell_batch:
-            return ExperimentResult(plan=plan,
-                                    outcomes=_execute_cellbatched(plan,
-                                                                  caches))
-        outcomes = [_execute_cell(cell, caches) for cell in plan.cells]
-        return ExperimentResult(plan=plan, outcomes=outcomes)
-    if cell_batch:
-        # per-cell CompileWatch/metrics attribution needs one dispatch per
-        # cell; keep the obs contract and run the matrix unbatched
-        print("# obs axis enabled: cell batching falls back to per-cell "
-              "execution")
-    return _execute_observed(plan, obs)
+            result = ExperimentResult(
+                plan=plan, outcomes=_execute_cellbatched(plan, caches))
+        else:
+            result = ExperimentResult(
+                plan=plan,
+                outcomes=[_execute_cell(cell, caches)
+                          for cell in plan.cells])
+    else:
+        if cell_batch:
+            # per-cell CompileWatch/metrics attribution needs one dispatch
+            # per cell; keep the obs contract and run the matrix unbatched
+            print("# obs axis enabled: cell batching falls back to "
+                  "per-cell execution")
+        result = _execute_observed(plan, obs)
+    _record_run(result, record_to)
+    return result
+
+
+def _record_run(result: ExperimentResult, record_to) -> None:
+    """Write the run-store manifest (best-effort: a full store disk must
+    never fail the experiment itself)."""
+    if record_to is False:
+        return
+    from repro.obs.runstore import (RunStore, default_store,
+                                    record_experiment)
+    if record_to is None:
+        store = default_store()
+    elif isinstance(record_to, RunStore):
+        store = record_to
+    else:
+        store = RunStore(str(record_to))
+    if store is None:
+        return
+    try:
+        result.run_id = record_experiment(result, store=store)
+    except Exception as e:                        # noqa: BLE001
+        print(f"# runstore: manifest not recorded: {e}")
 
 
 def _execute_observed(plan: ExperimentPlan, obs: ObsAxis) -> ExperimentResult:

@@ -97,6 +97,7 @@ METRICS_COLUMNS = [
     "active_size_mean", "active_size_min", "active_size_max",
     "step_latency_p50", "step_latency_p95", "step_latency_p99",
     "staleness_mean", "staleness_max", "staleness_clamped", "dropped",
+    "delay_tail_p99_max", "delay_tail_p99_mean", "delay_tail_p99_workers",
     "skipped",
 ]
 
@@ -112,10 +113,11 @@ def write_metrics_csv(records: list[dict], path: str) -> None:
     with open(path, "w", newline="") as f:
         w = csv.writer(f)
         w.writerow(METRICS_COLUMNS)
+        pad = len(METRICS_COLUMNS) - 4        # between delay and skipped
         for r in records:
             if "skipped" in r:
                 w.writerow([r.get("workload", ""), r["strategy"],
-                            r["delay"]] + [""] * 17 + [r["skipped"]])
+                            r["delay"]] + [""] * pad + [r["skipped"]])
                 continue
             obs = r.get("obs", {})
             sched = obs.get("schedule", {})
@@ -123,6 +125,9 @@ def write_metrics_csv(records: list[dict], path: str) -> None:
             active = sched.get("active_size", {})
             lat = sched.get("step_latency_s", {})
             stale = asy.get("staleness", {})
+            # delay_tail comes from whichever artifact stream the cell
+            # produced (sync schedules or the async trace)
+            tail = sched.get("delay_tail") or asy.get("delay_tail") or {}
             w.writerow([
                 r.get("workload", ""), r["strategy"], r["delay"],
                 r.get("trials", 1),
@@ -136,16 +141,26 @@ def write_metrics_csv(records: list[dict], path: str) -> None:
                 _fmt(lat.get("p99")),
                 _fmt(stale.get("mean")), _fmt(stale.get("max")),
                 _fmt(asy.get("staleness_clamped"), "d"),
-                _fmt(asy.get("dropped"), "d"), "",
+                _fmt(asy.get("dropped"), "d"),
+                _fmt(tail.get("p99_max")), _fmt(tail.get("p99_mean")),
+                _fmt(tail.get("workers"), "d"), "",
             ])
 
 
 def print_table(records: list[dict]) -> None:
-    """Human summary of a record list on stdout (shared by all CLIs)."""
+    """Human summary of a record list on stdout (shared by all CLIs).
+
+    Records from an obs-enabled run carry the CompileWatch host-time
+    split; the table then grows a ``compile/exec_s`` column so one glance
+    separates jit compilation from steady-state execution.
+    """
     has_wl = any(r.get("workload") for r in records)
+    has_split = any(r.get("compile_s") is not None for r in records)
     head = (f"{'workload':10s} " if has_wl else "") + \
         (f"{'strategy':14s} {'delay':12s} {'final f':>12s} "
-         f"{'metric':>22s} {'wallclock_s':>12s} {'trialsxT':>9s}")
+         f"{'metric':>22s} {'wallclock_s':>12s}") + \
+        (f" {'compile/exec_s':>15s}" if has_split else "") + \
+        f" {'trialsxT':>9s}"
     print(head)
     for rec in records:
         lead = f"{rec.get('workload', '-'):10s} " if has_wl else ""
@@ -158,6 +173,12 @@ def print_table(records: list[dict]) -> None:
         shape = (f"{len(obj)}x{len(obj[0])}"
                  if obj and isinstance(obj[0], (list, tuple))
                  else f"1x{len(obj)}")
+        split = ""
+        if has_split:
+            cs, es = rec.get("compile_s"), rec.get("execute_s")
+            split = (f" {cs:7.2f}/{es:7.2f}"
+                     if cs is not None and es is not None
+                     else f" {'-':>15s}")
         print(f"{lead}{rec['strategy']:14s} {rec['delay']:12s} "
               f"{rec['final_objective']:12.5f} {metric:>22s} "
-              f"{rec['wallclock_s']:12.2f} {shape:>9s}")
+              f"{rec['wallclock_s']:12.2f}{split} {shape:>9s}")

@@ -172,23 +172,39 @@ def main(argv: Sequence[str] | None = None) -> ExperimentResult:
 
     os.makedirs(args.out, exist_ok=True)
     formats = {f.strip() for f in args.formats.split(",")}
+    artifacts: dict = {}
     if "json" in formats:
-        result.to_json(os.path.join(args.out, "experiments.json"))
+        artifacts["records_json"] = os.path.join(args.out,
+                                                 "experiments.json")
+        result.to_json(artifacts["records_json"])
     if "csv" in formats:
-        result.to_csv(os.path.join(args.out, "experiments.csv"))
+        artifacts["trace_csv"] = os.path.join(args.out, "experiments.csv")
+        result.to_csv(artifacts["trace_csv"])
     if "summary" in formats:
-        result.to_summary_csv(os.path.join(args.out, "summary.csv"))
+        artifacts["summary_csv"] = os.path.join(args.out, "summary.csv")
+        result.to_summary_csv(artifacts["summary_csv"])
     if args.metrics_out:
         d = os.path.dirname(args.metrics_out)
         if d:
             os.makedirs(d, exist_ok=True)
         result.to_metrics_csv(args.metrics_out)
+        artifacts["metrics_csv"] = args.metrics_out
         print(f"wrote obs metrics to {args.metrics_out}")
     if args.trace:
+        artifacts["trace_jsonl"] = f"{args.trace}.jsonl"
+        artifacts["trace_perfetto"] = f"{args.trace}.perfetto.json"
         print(f"wrote obs trace to {args.trace}.jsonl / "
               f"{args.trace}.perfetto.json")
+    if result.run_id is not None and artifacts:
+        from repro.obs.runstore import default_store
+        store = default_store()
+        if store is not None:
+            store.attach_artifacts(result.run_id, artifacts)
     result.print_table()
     print(f"wrote {sorted(formats)} to {args.out}/")
+    if result.run_id is not None:
+        print(f"recorded run {result.run_id} "
+              f"(diff with: python -m repro.obs.diff latest latest~1)")
     return result
 
 

@@ -13,8 +13,17 @@ The observability substrate under every execution layer (DESIGN.md §11):
     compile time out of execute time via ``jax.monitoring``;
   * :mod:`repro.obs.profile` — opt-in ``jax.profiler`` capture and
     device-memory high-water marks;
+  * :mod:`repro.obs.sketch`  — O(1)-memory streaming estimators (P²
+    quantiles, EWMA, per-worker :class:`DelayTailEstimator` — the
+    sensing interface for adaptive redundancy);
+  * :mod:`repro.obs.runstore` — indexed run-manifest store (spec hash,
+    git sha, backend, artifact paths) every execute/bench run records to;
+  * ``python -m repro.obs.diff`` — cross-run regression gate: aligns two
+    stored runs (or a bench json vs its committed baseline) cell-by-cell
+    and exits non-zero on wall-clock/convergence regressions;
   * ``python -m repro.obs.report`` — text straggler-timeline /
-    phase-breakdown reports from a saved trace.
+    phase-breakdown reports from a saved trace, plus a self-contained
+    ``--html`` export.
 
 Design rule: with no active recorder every hook is a single ``is None``
 check — observability off is a zero-cost no-op path.
@@ -23,6 +32,9 @@ from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                       async_metrics, cell_summary, clamp_async_event,
                       schedule_metrics)
 from .profile import memory_high_water, memory_stats, profile_region
+from .runstore import (RunStore, default_store, provenance,
+                       record_experiment, runstore_enabled, spec_hash)
+from .sketch import DelayTailEstimator, Ewma, P2Quantile, QuantileSketch
 from .timing import CompileWatch, block, emit, time_us
 from .trace import TraceEvent, TraceRecorder, current_recorder, span
 
@@ -31,6 +43,9 @@ __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "schedule_metrics", "async_metrics", "cell_summary",
     "clamp_async_event",
+    "P2Quantile", "QuantileSketch", "Ewma", "DelayTailEstimator",
+    "RunStore", "default_store", "runstore_enabled", "provenance",
+    "spec_hash", "record_experiment",
     "CompileWatch", "block", "time_us", "emit",
     "profile_region", "memory_stats", "memory_high_water",
 ]

@@ -15,12 +15,14 @@ Two layers (DESIGN.md §11):
 
 Metric names are stable identifiers (the report CLI and tests key on
 them): ``miss_rate``, ``active_size``, ``step_latency_s``, ``staleness``,
-``staleness_clamped``, ``dropped``, ``compile_s``, ``execute_s``,
-``compiles``.
+``staleness_clamped``, ``dropped``, ``delay_tail``, ``compile_s``,
+``execute_s``, ``compiles``.
 """
 from __future__ import annotations
 
 import numpy as np
+
+from .sketch import DelayTailEstimator, QuantileSketch
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
@@ -50,39 +52,73 @@ class Gauge:
 
 
 class Histogram:
-    """An exact-sample histogram (cells record at most a few thousand
-    observations, so percentiles are computed from the raw samples instead
-    of fixed buckets)."""
+    """A bounded-memory histogram behind the historical raw-sample API.
 
-    def __init__(self):
-        self._samples: list = []
+    Up to ``buffer_size`` observations everything is exact (raw samples,
+    ``np.percentile``) — a 200-step cell behaves bit-identically to the
+    PR-6 implementation.  Beyond that the buffer seeds P² quantile
+    markers (:class:`repro.obs.sketch.QuantileSketch`) and raw samples
+    are dropped, so streaming workloads can observe forever at O(1)
+    memory (the ``summary()`` then carries ``approx: True``).  The
+    integer-bucket ``counts()`` view is kept exactly in a dict — its size
+    is the number of DISTINCT integer values (worker counts, staleness
+    bounds: small by construction), capped at ``max_buckets``.
+    """
+
+    MAX_BUCKETS = 4096
+
+    def __init__(self, percentiles=(50, 95, 99), buffer_size: int = 4096,
+                 max_buckets: int = MAX_BUCKETS):
+        self._sketch = QuantileSketch(percentiles, buffer_size)
+        self._counts: dict | None = {}
+        self._max_buckets = int(max_buckets)
 
     def observe(self, v) -> None:
-        self._samples.append(float(v))
+        self.observe_many([v])
 
     def observe_many(self, vs) -> None:
-        self._samples.extend(np.asarray(vs, dtype=float).ravel().tolist())
+        a = np.asarray(vs, dtype=float).ravel()
+        self._sketch.observe_many(a)
+        if self._counts is not None:
+            ints, cnts = np.unique(a.astype(int), return_counts=True)
+            for v, c in zip(ints.tolist(), cnts.tolist()):
+                self._counts[v] = self._counts.get(v, 0) + c
+            if len(self._counts) > self._max_buckets:
+                self._counts = None        # too many distinct values
 
     @property
     def count(self) -> int:
-        return len(self._samples)
+        return self._sketch.count
+
+    @property
+    def spilled(self) -> bool:
+        """True once raw samples were folded into the P² sketch."""
+        return self._sketch.spilled
 
     def summary(self, percentiles=(50, 95, 99)) -> dict:
-        if not self._samples:
+        if self.count == 0:
             return {"count": 0}
-        a = np.asarray(self._samples)
-        out = {"count": int(a.size), "mean": float(a.mean()),
-               "min": float(a.min()), "max": float(a.max())}
-        for q in percentiles:
-            out[f"p{q}"] = float(np.percentile(a, q))
-        return out
+        if not self._sketch.spilled:
+            s = self._sketch.summary()
+            for q in tuple(s):
+                if isinstance(q, str) and q.startswith("p"):
+                    del s[q]
+            for q in percentiles:
+                s[f"p{q}"] = self._sketch.quantile(q)
+            return s
+        if tuple(percentiles) != self._sketch.percentiles:
+            raise ValueError(
+                f"histogram spilled tracking {self._sketch.percentiles}; "
+                f"cannot produce {tuple(percentiles)}")
+        return self._sketch.summary()
 
     def counts(self) -> dict:
         """Integer-bucket view ``{str(value): occurrences}`` — the natural
-        rendering for discrete quantities (active-set sizes, staleness)."""
-        vals, cnts = np.unique(np.asarray(self._samples, dtype=int),
-                               return_counts=True)
-        return {str(int(v)): int(c) for v, c in zip(vals, cnts)}
+        rendering for discrete quantities (active-set sizes, staleness);
+        ``{}`` when the stream exceeded ``max_buckets`` distinct values."""
+        if self._counts is None:
+            return {}
+        return {str(v): int(c) for v, c in sorted(self._counts.items())}
 
 
 class MetricsRegistry:
@@ -129,8 +165,10 @@ def schedule_metrics(schedules) -> dict:
     cells pass all R realizations, chunked workloads every sub-solve).
 
     Returns per-worker ``miss_rate`` (fraction of iterations worker i was
-    erased), the ``active_size`` distribution, and per-iteration
-    ``step_latency_s`` (commit-to-commit barrier time) percentiles.
+    erased), the ``active_size`` distribution, per-iteration
+    ``step_latency_s`` (commit-to-commit barrier time) percentiles, and
+    the per-worker ``delay_tail`` snapshot (EWMA delay + p50/p95/p99 of
+    each worker's arrival latency — the auto-tuner's sensing interface).
     Schedules whose worker count differs from the first are skipped (a
     matrix cell never mixes cluster sizes).
     """
@@ -142,12 +180,14 @@ def schedule_metrics(schedules) -> dict:
                             for s in schedules if s.m == m], axis=0)
     lat = Histogram()
     active = Histogram()
+    tail = DelayTailEstimator(m)
     for s in schedules:
         if s.m != m:
             continue
         times = np.asarray(s.times, dtype=float)
         lat.observe_many(np.diff(times, prepend=0.0))
         active.observe_many(np.asarray(s.masks).sum(axis=1))
+        tail.observe_schedule(s)
     miss = 1.0 - masks.mean(axis=0)
     return {
         "iterations": int(masks.shape[0]),
@@ -157,6 +197,7 @@ def schedule_metrics(schedules) -> dict:
         "max_miss_rate": float(miss.max()),
         "active_size": {**active.summary(), "hist": active.counts()},
         "step_latency_s": lat.summary(),
+        "delay_tail": tail.snapshot(),
     }
 
 
@@ -186,6 +227,7 @@ def async_metrics(traces) -> dict:
         return {}
     stale = Histogram()
     lat = Histogram()
+    tail = DelayTailEstimator(int(traces[0].m))
     dropped = 0
     clamped = 0
     for t in traces:
@@ -199,6 +241,8 @@ def async_metrics(traces) -> dict:
             clamped += was
         lat.observe_many(np.diff(np.asarray(t.times, dtype=float),
                                  prepend=0.0))
+        if t.m == tail.m:
+            tail.observe_async(t)
         dropped += int(t.dropped)
     return {
         "updates": stale.count,
@@ -207,6 +251,7 @@ def async_metrics(traces) -> dict:
         "update_latency_s": lat.summary(),
         "dropped": dropped,
         "staleness_clamped": clamped,
+        "delay_tail": tail.snapshot(),
     }
 
 

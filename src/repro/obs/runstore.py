@@ -1,0 +1,287 @@
+"""Indexed run store: every executed matrix leaves a provenance manifest.
+
+The paper's claims are wall-clock claims, so runs must be comparable
+across time and machines (DESIGN.md §13).  Every
+``repro.experiments.execute`` (and the ``benchmarks.run`` suite) records
+one **manifest** — spec hash, git sha, backend, jax version, device
+count, ISO timestamp, per-cell result summaries, artifact paths — into a
+store laid out as::
+
+    runs/store/
+      index.jsonl                  # one line per run (the query index)
+      <run_id>/manifest.json       # run_id = <UTC stamp>-<spec_hash[:8]>
+
+``python -m repro.obs.diff`` aligns two manifests cell-by-cell and gates
+on regressions.  The store root comes from the ``REPRO_RUNSTORE`` env
+var: unset -> ``runs/store`` under the current directory, a path ->
+that directory, ``0``/empty -> recording disabled (benchmark timing
+loops disable it explicitly instead, via ``execute(record_to=False)``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import subprocess
+from datetime import datetime, timezone
+
+__all__ = [
+    "RunStore", "default_store", "runstore_enabled", "provenance",
+    "git_sha", "spec_signature", "spec_hash", "record_experiment",
+]
+
+ENV_VAR = "REPRO_RUNSTORE"
+DEFAULT_ROOT = os.path.join("runs", "store")
+
+
+# ---------------------------------------------------------------------------
+# Provenance
+# ---------------------------------------------------------------------------
+
+def git_sha(cwd: str | None = None) -> str:
+    """The current commit sha (``unknown`` outside a git checkout)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=cwd, capture_output=True,
+            text=True, timeout=10)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except Exception:
+        pass
+    return "unknown"
+
+
+def provenance() -> dict:
+    """The environment stamp every manifest (and ``BENCH_*.json``, via
+    ``benchmarks.common.bench_meta``) carries: git sha, backend, jax
+    version, device count, ISO-8601 UTC timestamp."""
+    meta = {
+        "git_sha": git_sha(),
+        "timestamp": datetime.now(timezone.utc).isoformat(
+            timespec="seconds"),
+    }
+    try:
+        import jax
+        meta["backend"] = jax.default_backend()
+        meta["jax_version"] = jax.__version__
+        meta["device_count"] = jax.device_count()
+    except Exception:
+        meta.update(backend="unavailable", jax_version="unavailable",
+                    device_count=0)
+    return meta
+
+
+# ---------------------------------------------------------------------------
+# Spec hashing
+# ---------------------------------------------------------------------------
+
+def _sig_value(v):
+    """A canonical JSON-able stand-in for one spec field value."""
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    if isinstance(v, (list, tuple)):
+        return [_sig_value(x) for x in v]
+    if isinstance(v, dict):
+        return {str(k): _sig_value(x) for k, x in sorted(v.items())}
+    if dataclasses.is_dataclass(v) and not isinstance(v, type):
+        try:
+            return {f.name: _sig_value(getattr(v, f.name))
+                    for f in dataclasses.fields(v)}
+        except Exception:
+            pass
+    # array-likes / ProblemSpec / policy instances: identify by type +
+    # shape-ish attributes, never by contents (hashing a 16 GiB matrix
+    # would defeat the point; same-shaped respins intentionally collide)
+    tag = {"type": type(v).__name__}
+    for attr in ("n", "p", "m", "k", "shape", "name"):
+        try:
+            a = getattr(v, attr)
+        except Exception:
+            continue
+        if isinstance(a, (bool, int, float, str)):
+            tag[attr] = a
+        elif isinstance(a, tuple):
+            tag[attr] = [int(x) for x in a]
+    return tag
+
+
+def spec_signature(spec) -> dict:
+    """Canonical JSON-safe description of an ``ExperimentSpec`` — the
+    dataclass tree with problem/policy objects reduced to type + shape."""
+    return _sig_value(spec)
+
+
+def spec_hash(spec) -> str:
+    """Stable 16-hex-digit hash of :func:`spec_signature` — the key two
+    runs of the same declared matrix share."""
+    blob = json.dumps(spec_signature(spec), sort_keys=True,
+                      separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# The store
+# ---------------------------------------------------------------------------
+
+def runstore_enabled() -> bool:
+    """False iff ``REPRO_RUNSTORE`` is set to ``0``/empty."""
+    v = os.environ.get(ENV_VAR)
+    return v is None or v not in ("", "0", "off", "false")
+
+
+def default_store() -> "RunStore | None":
+    """The process-default store (None when recording is disabled)."""
+    if not runstore_enabled():
+        return None
+    root = os.environ.get(ENV_VAR) or DEFAULT_ROOT
+    return RunStore(root)
+
+
+class RunStore:
+    """An append-only directory of run manifests with a JSONL index."""
+
+    def __init__(self, root: str):
+        self.root = str(root)
+
+    @property
+    def index_path(self) -> str:
+        return os.path.join(self.root, "index.jsonl")
+
+    def manifest_path(self, run_id: str) -> str:
+        return os.path.join(self.root, run_id, "manifest.json")
+
+    # -- write ----------------------------------------------------------
+
+    def _new_run_id(self, manifest: dict) -> str:
+        stamp = datetime.now(timezone.utc).strftime("%Y%m%dT%H%M%SZ")
+        tag = (manifest.get("spec_hash") or manifest.get("kind")
+               or "run")[:8]
+        base = f"{stamp}-{tag}"
+        run_id, n = base, 1
+        while os.path.exists(os.path.join(self.root, run_id)):
+            n += 1
+            run_id = f"{base}.{n}"
+        return run_id
+
+    def record(self, manifest: dict) -> str:
+        """Assign a run id, write ``<run_id>/manifest.json`` and append
+        the index line; returns the run id."""
+        os.makedirs(self.root, exist_ok=True)
+        manifest = dict(manifest)
+        manifest.setdefault("kind", "experiment")
+        if "timestamp" not in manifest:
+            manifest.update(provenance())
+        run_id = manifest.get("run_id") or self._new_run_id(manifest)
+        manifest["run_id"] = run_id
+        os.makedirs(os.path.join(self.root, run_id), exist_ok=True)
+        with open(self.manifest_path(run_id), "w") as f:
+            json.dump(manifest, f, indent=1)
+        entry = {k: manifest.get(k) for k in
+                 ("run_id", "kind", "spec_hash", "timestamp", "git_sha",
+                  "backend", "label")}
+        with open(self.index_path, "a") as f:
+            f.write(json.dumps(entry) + "\n")
+        return run_id
+
+    def attach_artifacts(self, run_id: str, artifacts: dict) -> None:
+        """Merge artifact paths (records JSON, metrics CSV, trace, ...)
+        into an existing manifest."""
+        manifest = self.load(run_id)
+        arts = dict(manifest.get("artifacts") or {})
+        arts.update({k: str(v) for k, v in artifacts.items()
+                     if v is not None})
+        manifest["artifacts"] = arts
+        with open(self.manifest_path(manifest["run_id"]), "w") as f:
+            json.dump(manifest, f, indent=1)
+
+    # -- query ----------------------------------------------------------
+
+    def runs(self) -> list[dict]:
+        """Index entries, oldest first (corrupt lines skipped)."""
+        if not os.path.exists(self.index_path):
+            return []
+        out = []
+        with open(self.index_path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    out.append(json.loads(line))
+                except json.JSONDecodeError:
+                    continue
+        return out
+
+    def load(self, ref: str) -> dict:
+        """Load one manifest by run id (or unique prefix), or by path to
+        a manifest file / run directory."""
+        if os.path.isdir(ref):
+            ref = os.path.join(ref, "manifest.json")
+        if os.path.isfile(ref):
+            with open(ref) as f:
+                return json.load(f)
+        path = self.manifest_path(ref)
+        if os.path.isfile(path):
+            with open(path) as f:
+                return json.load(f)
+        matches = [r["run_id"] for r in self.runs()
+                   if r.get("run_id", "").startswith(ref)]
+        if len(matches) == 1:
+            return self.load(matches[0])
+        if len(matches) > 1:
+            raise KeyError(f"run ref '{ref}' is ambiguous: {matches}")
+        raise KeyError(f"no run '{ref}' in store {self.root}")
+
+    def latest(self, *, spec_hash: str | None = None,
+               kind: str | None = None, offset: int = 0) -> dict | None:
+        """The manifest of the most recent matching run (``offset`` steps
+        back in time); None when nothing matches."""
+        rows = [r for r in self.runs()
+                if (spec_hash is None or r.get("spec_hash") == spec_hash)
+                and (kind is None or r.get("kind") == kind)]
+        if offset >= len(rows):
+            return None
+        return self.load(rows[-1 - offset]["run_id"])
+
+    def resolve(self, ref: str) -> dict:
+        """Resolve a CLI run reference: ``latest`` / ``latest~N`` (N runs
+        back), a run id or unique prefix, or a path."""
+        if ref == "latest":
+            m = self.latest()
+            if m is None:
+                raise KeyError(f"store {self.root} is empty")
+            return m
+        if ref.startswith("latest~"):
+            off = int(ref.split("~", 1)[1])
+            m = self.latest(offset=off)
+            if m is None:
+                raise KeyError(f"store {self.root} has no run {ref}")
+            return m
+        return self.load(ref)
+
+
+# ---------------------------------------------------------------------------
+# Experiment wiring
+# ---------------------------------------------------------------------------
+
+def record_experiment(result, *, store: "RunStore | None" = None,
+                      artifacts: dict | None = None) -> str | None:
+    """Write the manifest of one ``ExperimentResult`` (see
+    ``repro.experiments.execute``); returns the run id, or None when
+    recording is disabled and no explicit store was given."""
+    from .analyze import summarize_records
+    if store is None:
+        store = default_store()
+        if store is None:
+            return None
+    spec = result.spec
+    manifest = {
+        "kind": "experiment",
+        "spec_hash": spec_hash(spec),
+        "spec": spec_signature(spec),
+        **provenance(),
+        "cells": summarize_records(result.records),
+        "artifacts": {k: str(v) for k, v in (artifacts or {}).items()},
+    }
+    return store.record(manifest)

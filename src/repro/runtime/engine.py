@@ -259,12 +259,17 @@ class ClusterEngine:
 
     def __init__(self, delay_model: DelayModel, m: int, *,
                  compute_time: float = 0.05, master_overhead: float = 0.01,
-                 seed: int = 0):
+                 seed: int = 0, tail_estimator=None):
         self.delay_model = delay_model
         self.m = int(m)
         self.compute_time = float(compute_time)
         self.master_overhead = float(master_overhead)
         self.seed = int(seed)
+        # online delay-tail sensing (repro.obs.sketch.DelayTailEstimator):
+        # when set, every realized schedule / async trace updates it
+        # in-stream — the adaptive-redundancy controller's input.  None
+        # (the default) keeps sampling on the zero-overhead path.
+        self.tail_estimator = tail_estimator
         # which realization lane this engine's samples record under when an
         # obs TraceRecorder is active; engine.trial(r) children carry r so
         # host-loop harnesses land on the same lanes as batched samplers
@@ -293,7 +298,8 @@ class ClusterEngine:
         child = ClusterEngine(self.delay_model, self.m,
                               compute_time=self.compute_time,
                               master_overhead=self.master_overhead,
-                              seed=self._trial_seed(realization))
+                              seed=self._trial_seed(realization),
+                              tail_estimator=self.tail_estimator)
         child._obs_realization = self._obs_realization + realization
         return child
 
@@ -314,6 +320,8 @@ class ClusterEngine:
                 sched = self._sample_fastest_k(rng, steps, policy.k)
             else:
                 sched = self._sample_generic(rng, steps, policy)
+        if self.tail_estimator is not None:
+            self.tail_estimator.observe_schedule(sched)
         rec = _obs_recorder()
         if rec is not None:
             rec.record_schedule(
@@ -450,6 +458,8 @@ class ClusterEngine:
                 times=np.asarray(times),
                 dropped=dropped,
             )
+        if self.tail_estimator is not None:
+            self.tail_estimator.observe_async(trace)
         rec = _obs_recorder()
         if rec is not None:
             rec.record_async(

@@ -250,10 +250,12 @@ def test_tracing_overhead_disabled_under_5_percent():
             best = min(best, time.perf_counter() - t0)
         return best
 
-    work()                             # warm caches
+    best_of()                          # warm caches / allocator
     t_off = best_of()
     assert current_recorder() is None
-    assert t_off * 0.95 < best_of() < t_off * 1.05 + 2e-3
+    # absolute slack on BOTH sides: sub-millisecond work drifts either way
+    # on a busy host, and a faster re-measure is not an overhead signal
+    assert t_off * 0.95 - 2e-3 < best_of() < t_off * 1.05 + 2e-3
 
 
 # ---------------------------------------------------------------------------
