@@ -1,0 +1,128 @@
+"""Fault-injection overhead (DESIGN.md §14).
+
+The fault subsystem's contract is that it costs nothing when unused: with
+``faults=None`` the engine's samplers run the exact pre-fault code path
+behind a single is-None check, so the hot vectorized fastest-k sampler must
+stay within noise of its pre-fault timing (``sample_nofault`` is the gated
+number — ``repro.obs.diff --against-baseline BENCH_faults.json`` in CI).
+The other rows price what faults DO cost when enabled:
+
+  * ``sample_zero_fault_model`` — a fault model attached but realizing no
+    faults: the per-step fault loop replaces the vectorized sampler (and
+    must still reproduce the clean schedule bit for bit);
+  * ``sample_chaos`` — crashes + blackouts + corruption composed;
+  * ``cell_chaos_*`` — an end-to-end batched coded-gd cell under chaos for
+    each degradation mode (renormalize / hold / backoff), against the
+    clean-cell reference.
+
+    PYTHONPATH=src python -m benchmarks.bench_faults            # full
+    PYTHONPATH=src python -m benchmarks.bench_faults --smoke    # CI preset
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from repro.runtime import (ClusterEngine, FastestK, ProblemSpec,
+                           get_strategy, make_delay_model)
+
+from .common import bench_meta, emit, time_us
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(_ROOT, "BENCH_faults.json")
+
+CHAOS = ("crash:p=0.2,at=0.4;blackout:p=0.2,at=0.2,dur=0.5;"
+         "corrupt:p=0.05")
+M, K = 16, 12
+
+
+def _engine(faults=None):
+    return ClusterEngine(make_delay_model("bimodal"), M, seed=0,
+                         faults=faults)
+
+
+def run(steps: int = 200, trials: int = 16, iters: int = 5,
+        out_json: str = DEFAULT_OUT) -> list[dict]:
+    results = []
+
+    def sample(eng):
+        return eng.sample_schedules(steps, FastestK(K), trials)
+
+    clean_eng, zerop_eng, chaos_eng = (_engine(), _engine("crash:p=0,at=0.5"),
+                                       _engine(CHAOS))
+    # correctness first: an attached-but-empty fault model must reproduce
+    # the clean schedule bit for bit (tagged fault rng stream)
+    clean, zerop = sample(clean_eng), sample(zerop_eng)
+    identical = bool(np.array_equal(clean.masks, zerop.masks)
+                     and np.array_equal(clean.times, zerop.times))
+
+    us_clean = time_us(sample, clean_eng, iters=iters)
+    us_zerop = time_us(sample, zerop_eng, iters=iters)
+    us_chaos = time_us(sample, chaos_eng, iters=iters)
+    emit("sample_nofault", us_clean, f"R={trials};T={steps};m={M}")
+    emit("sample_zero_fault_model", us_zerop,
+         f"vs_nofault={us_zerop / max(us_clean, 1e-9):.2f}x;"
+         f"bit_identical={identical}")
+    emit("sample_chaos", us_chaos,
+         f"vs_nofault={us_chaos / max(us_clean, 1e-9):.2f}x")
+    results.append({
+        "case": "sampling", "R": trials, "T": steps, "m": M, "k": K,
+        "us_nofault": us_clean, "us_zero_fault_model": us_zerop,
+        "us_chaos": us_chaos, "zero_model_bit_identical": identical,
+    })
+
+    # end-to-end cells: one batched coded-gd matrix cell, clean vs chaos
+    # under each degradation mode (schedule sampling + fused device scan)
+    spec = ProblemSpec.synthetic(512, 128, seed=0)
+    strat = get_strategy("coded-gd")
+
+    def cell(eng, **cfg):
+        return strat.run_batched(spec, eng, steps=steps, trials=trials,
+                                 eval_every=10, k=K, **cfg)
+
+    us_cell_clean = time_us(cell, clean_eng, iters=iters)
+    emit("cell_clean", us_cell_clean, f"R={trials};T={steps}")
+    row = {"case": "cell", "R": trials, "T": steps,
+           "us_clean": us_cell_clean}
+    for mode, cfg in [("renormalize", {}),
+                      ("hold", {"degrade": "hold:shrink=0.5"}),
+                      ("backoff", {"degrade": "backoff:base=0.05,retries=3"})]:
+        us = time_us(cell, chaos_eng, iters=iters, **cfg)
+        emit(f"cell_chaos_{mode}", us,
+             f"vs_clean={us / max(us_cell_clean, 1e-9):.2f}x")
+        row[f"us_chaos_{mode}"] = us
+    results.append(row)
+
+    os.makedirs(os.path.dirname(os.path.abspath(out_json)), exist_ok=True)
+    with open(out_json, "w") as f:
+        json.dump({"bench": "fault-injection overhead (DESIGN §14)",
+                   "meta": bench_meta(),
+                   "results": results}, f, indent=1)
+    print(f"# wrote {out_json}")
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="benchmarks.bench_faults")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--trials", type=int, default=16)
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI preset: baseline shape (T=200, R=16) with 2 "
+                         "timing iters, so the regression gate aligns "
+                         "apples to apples")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        steps, trials, iters = 200, 16, 2
+    else:
+        steps, trials, iters = args.steps, args.trials, args.iters
+    print("name,us_per_call,derived")
+    return run(steps=steps, trials=trials, iters=iters, out_json=args.out)
+
+
+if __name__ == "__main__":
+    main()

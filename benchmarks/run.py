@@ -36,7 +36,7 @@ def main() -> None:
     from . import (bench_spectrum, bench_ridge, bench_lasso, bench_logistic,
                    bench_matrix_factorization, bench_kernels, bench_coded_lm,
                    bench_runtime, bench_encoding, bench_trials,
-                   bench_experiments, bench_fused, perf_iter)
+                   bench_experiments, bench_fused, bench_faults, perf_iter)
     print("name,us_per_call,derived")
     suites = [
         ("spectrum (paper Figs 5-6)", bench_spectrum.run),
@@ -54,6 +54,8 @@ def main() -> None:
          bench_experiments.run),
         ("fused masked-gradient path: kernel + cell-batched matrix "
          "(DESIGN §12)", bench_fused.run),
+        ("fault-injection overhead: no-fault path + chaos cells "
+         "(DESIGN §14)", bench_faults.run),
         ("perf-iter roofline dry-run (512-device subprocess)",
          perf_iter.run),
     ]

@@ -72,7 +72,16 @@ def constant_delays(value: float = 1.0) -> DelayModel:
 
 
 def fastest_k(delays: np.ndarray, k: int) -> np.ndarray:
-    """Indices of the k smallest delays (the active set A_t)."""
+    """Indices of the k smallest delays (the active set A_t).
+
+    ``k`` is clamped into [0, m]: k <= 0 selects nobody (the empty active
+    set the fault-degradation paths must survive) and k >= m selects
+    everyone — both without tripping ``argpartition``'s bounds."""
+    m = delays.shape[0]
+    if k <= 0:
+        return np.zeros(0, dtype=np.intp)
+    if k >= m:
+        return np.arange(m)
     return np.argpartition(delays, k - 1)[:k]
 
 

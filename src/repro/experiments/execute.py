@@ -27,7 +27,9 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import hashlib
 import os
+import time
 from typing import Any
 
 import numpy as np
@@ -145,7 +147,9 @@ def cell_label(cell: PlannedCell) -> str:
     return f"{prefix}{cell.resolved_strategy}x{cell.delay}"
 
 
-def execute(plan: ExperimentPlan, *, record_to=None) -> ExperimentResult:
+def execute(plan: ExperimentPlan, *, record_to=None, retries: int = 0,
+            retry_base: float = 0.5,
+            resume: str | None = None) -> ExperimentResult:
     """Run every planned cell; never aborts mid-matrix for per-cell
     incompatibilities (those become skip-with-reason records).
 
@@ -160,63 +164,192 @@ def execute(plan: ExperimentPlan, *, record_to=None) -> ExperimentResult:
     (``repro.obs.runstore``) — ``record_to`` controls where: ``None`` uses
     the ``REPRO_RUNSTORE``-governed default store, ``False`` skips
     recording (benchmark timing loops), a :class:`RunStore` or path
-    records there.  The manifest is a side artifact; the returned records
-    are unaffected.
+    records there.  The manifest opens with ``status: "running"`` before
+    the first cell and each completed cell record streams to
+    ``<run_id>/cells/<index>.json``, so a killed matrix is resumable:
+    ``resume="RUN_ID"`` (or ``latest``) replays the streamed records —
+    after verifying the plan's spec hash matches the recorded run's — and
+    executes only the cells that never finished.  Resumed outcomes carry
+    the persisted record with ``result=None`` (raw result objects are not
+    serialized).
+
+    ``retries`` re-runs a cell whose execution RAISED (host crash, OOM —
+    not the in-simulation faults, and not per-cell ``ValueError``
+    incompatibilities, which are already skip records) up to that many
+    extra times with capped exponential backoff (``retry_base * 2**i``
+    seconds, ±25% deterministic jitter, 30 s cap); the last failure
+    re-raises, and the streamed records make the partial matrix resumable.
     """
     obs = getattr(plan.spec, "obs", None)
     cell_batch = getattr(plan.spec.placement, "cell_batch", False)
+    store, run_id, done = _open_run(plan, record_to, resume)
+    runner = _CellRunner(retries=retries, retry_base=retry_base,
+                         store=store, run_id=run_id, done=done)
     if obs is None or not obs.enabled:
-        caches: dict = {}
         if cell_batch:
             result = ExperimentResult(
-                plan=plan, outcomes=_execute_cellbatched(plan, caches))
+                plan=plan, outcomes=_execute_cellbatched(plan, runner))
         else:
             result = ExperimentResult(
                 plan=plan,
-                outcomes=[_execute_cell(cell, caches)
-                          for cell in plan.cells])
+                outcomes=[runner.run(cell) for cell in plan.cells])
     else:
         if cell_batch:
             # per-cell CompileWatch/metrics attribution needs one dispatch
             # per cell; keep the obs contract and run the matrix unbatched
             print("# obs axis enabled: cell batching falls back to "
                   "per-cell execution")
-        result = _execute_observed(plan, obs)
-    _record_run(result, record_to)
+        result = _execute_observed(plan, obs, runner)
+    _finish_run(result, store, run_id)
     return result
 
 
-def _record_run(result: ExperimentResult, record_to) -> None:
-    """Write the run-store manifest (best-effort: a full store disk must
-    never fail the experiment itself)."""
+def _resolve_store(record_to):
+    """The run store ``record_to`` selects (None when recording is off)."""
     if record_to is False:
-        return
-    from repro.obs.runstore import (RunStore, default_store,
-                                    record_experiment)
+        return None
+    from repro.obs.runstore import RunStore, default_store
     if record_to is None:
-        store = default_store()
-    elif isinstance(record_to, RunStore):
-        store = record_to
-    else:
-        store = RunStore(str(record_to))
+        return default_store()
+    if isinstance(record_to, RunStore):
+        return record_to
+    return RunStore(str(record_to))
+
+
+def _open_run(plan: ExperimentPlan, record_to, resume):
+    """Open the run-store side of one matrix: a fresh ``running`` manifest,
+    or — with ``resume`` — the prior run's identity plus its streamed cell
+    records.  Returns ``(store, run_id, {cell index: record})``."""
+    store = _resolve_store(record_to)
+    if resume is None:
+        if store is None:
+            return None, None, {}
+        from repro.obs.runstore import begin_experiment
+        try:
+            run_id = begin_experiment(plan.spec, store=store,
+                                      total_cells=len(plan.cells))
+        except Exception as e:                    # noqa: BLE001
+            # best-effort: a full store disk must never fail the experiment
+            print(f"# runstore: manifest not recorded: {e}")
+            return None, None, {}
+        return store, run_id, {}
     if store is None:
+        raise ValueError(
+            "resume needs an enabled run store (REPRO_RUNSTORE, or an "
+            "explicit record_to)")
+    from repro.obs.runstore import completed_cells, spec_hash
+    manifest = store.resolve(str(resume))
+    want, got = spec_hash(plan.spec), manifest.get("spec_hash")
+    if got != want:
+        raise ValueError(
+            f"resume {manifest.get('run_id')}: spec hash mismatch (run "
+            f"{got}, plan {want}) — resuming would mix records from "
+            f"different matrices")
+    run_id = manifest["run_id"]
+    done = completed_cells(store, run_id)
+    print(f"# resuming {run_id}: {len(done)}/{len(plan.cells)} cells "
+          f"already recorded")
+    return store, run_id, done
+
+
+def _finish_run(result: ExperimentResult, store, run_id) -> None:
+    """Finalize the running manifest (best-effort, like _open_run)."""
+    if store is None or run_id is None:
         return
+    result.run_id = run_id
+    from repro.obs.runstore import finish_experiment
     try:
-        result.run_id = record_experiment(result, store=store)
+        finish_experiment(result, store, run_id)
     except Exception as e:                        # noqa: BLE001
-        print(f"# runstore: manifest not recorded: {e}")
+        print(f"# runstore: manifest not finalized: {e}")
 
 
-def _execute_observed(plan: ExperimentPlan, obs: ObsAxis) -> ExperimentResult:
+def _retry_delay(base: float, attempt: int, index: int,
+                 cap: float = 30.0) -> float:
+    """Backoff before retry ``attempt`` (1-based) of one cell: capped
+    exponential with ±25% jitter derived from (cell, attempt) — spreads
+    concurrent harnesses without introducing host randomness."""
+    d = base * (2.0 ** (attempt - 1))
+    h = hashlib.sha256(f"{index}:{attempt}".encode()).digest()[0] / 255.0
+    return min(cap, d * (0.75 + 0.5 * h))     # cap bounds the jittered wait
+
+
+class _CellRunner:
+    """Per-cell execution policy for one matrix: the shared problem/data
+    caches, crash retry with capped exponential backoff, and the streamed
+    run-store records that make a killed matrix resumable."""
+
+    def __init__(self, *, retries: int = 0, retry_base: float = 0.5,
+                 store=None, run_id=None, done=None):
+        self.caches: dict = {}
+        self.retries = max(0, int(retries))
+        self.retry_base = float(retry_base)
+        self.store = store
+        self.run_id = run_id
+        self.done = dict(done or {})
+
+    def resumed(self, cell: PlannedCell) -> "CellOutcome | None":
+        """The persisted outcome of an already-completed cell, or None."""
+        if cell.index not in self.done:
+            return None
+        return CellOutcome(cell, self.done[cell.index])
+
+    def run(self, cell: PlannedCell, *, persist: bool = True) -> "CellOutcome":
+        oc = self.resumed(cell)
+        if oc is not None:
+            return oc
+        oc = self._attempt(cell)
+        if persist:
+            self.persist(oc)
+        return oc
+
+    def _attempt(self, cell: PlannedCell) -> "CellOutcome":
+        last: Exception | None = None
+        for attempt in range(self.retries + 1):
+            if attempt:
+                delay = _retry_delay(self.retry_base, attempt, cell.index)
+                print(f"# cell {cell.index} ({cell_label(cell)}) raised "
+                      f"{type(last).__name__}: {last}; retry {attempt}/"
+                      f"{self.retries} in {delay:.2f}s")
+                time.sleep(delay)
+            try:
+                return _execute_cell(cell, self.caches)
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except Exception as e:                # noqa: BLE001
+                last = e
+        assert last is not None
+        raise last
+
+    def persist(self, oc: "CellOutcome") -> None:
+        """Stream one finished cell record (best-effort; no-op for cells
+        that were loaded from a resumed run)."""
+        if (self.store is None or self.run_id is None
+                or oc.cell.index in self.done):
+            return
+        from repro.obs.runstore import record_cell
+        try:
+            record_cell(self.store, self.run_id, oc.cell.index, oc.record)
+        except Exception as e:                    # noqa: BLE001
+            print(f"# runstore: cell {oc.cell.index} not recorded: {e}")
+
+
+def _execute_observed(plan: ExperimentPlan, obs: ObsAxis,
+                      runner: _CellRunner) -> ExperimentResult:
     from repro.obs import (CompileWatch, TraceRecorder, cell_summary,
                            memory_high_water, profile_region)
     rec = TraceRecorder(meta={"cells": len(plan.cells),
                               "trials": plan.spec.trials.trials,
                               "placement": plan.spec.placement.mode})
-    caches: dict = {}
     outcomes: list = []
     with rec.activate():
         for cell in plan.cells:
+            resumed = runner.resumed(cell)
+            if resumed is not None:
+                # a resumed record keeps its original obs attribution —
+                # nothing ran here to watch
+                outcomes.append(resumed)
+                continue
             label = cell_label(cell)
             mark = rec.checkpoint()
             prof = (profile_region(os.path.join(obs.profile,
@@ -224,7 +357,7 @@ def _execute_observed(plan: ExperimentPlan, obs: ObsAxis) -> ExperimentResult:
                     if obs.profile and cell.skip is None
                     else contextlib.nullcontext())
             with rec.cell(label), prof, CompileWatch() as cw:
-                outcome = _execute_cell(cell, caches)
+                outcome = runner.run(cell, persist=False)
             if not outcome.skipped:
                 summary = cell_summary(rec.sources_since(mark))
                 if obs.profile:
@@ -235,6 +368,7 @@ def _execute_observed(plan: ExperimentPlan, obs: ObsAxis) -> ExperimentResult:
                     host_s=cw.total_s, compile_s=cw.compile_s,
                     execute_s=cw.execute_s, compiles=cw.compiles,
                     obs=summary)
+            runner.persist(outcome)
             outcomes.append(outcome)
     if obs.trace:
         prefix = obs.trace[:-len(".jsonl")] \
@@ -260,7 +394,8 @@ def run(spec: ExperimentSpec) -> ExperimentResult:
 def _engine(cell: PlannedCell):
     from repro.runtime.engine import ClusterEngine, make_delay_model
     return ClusterEngine(make_delay_model(cell.delay), cell.m,
-                         compute_time=cell.compute_time, seed=cell.seed)
+                         compute_time=cell.compute_time, seed=cell.seed,
+                         faults=cell.faults)
 
 
 def _execute_cell(cell: PlannedCell, caches: dict) -> CellOutcome:
@@ -301,6 +436,8 @@ def _execute_synthetic_cell(cell: PlannedCell, caches: dict) -> CellOutcome:
         cfg.setdefault("policy", resolve_policy(
             st.policy or "fastest-k", cell.m, cell.k,
             deadline=st.deadline, beta=st.policy_beta))
+    if cell.degrade is not None:
+        cfg.setdefault("degrade", cell.degrade)
     base = {"strategy": cell.resolved_strategy, "delay": cell.delay,
             "n": spec_.n, "p": spec_.p, "m": cell.m, "k": cell.k,
             "seed": cell.seed}
@@ -344,10 +481,12 @@ def _cellbatch_key(cell: PlannedCell):
 
     Cells in one group share the compiled program, so everything that
     shapes or re-parameterizes it is in the key: problem identity, strategy,
-    encoder config, m, steps, trials, eval_every, seed, extra options.
-    Delay model / compute time / policy / k / step size are FREE axes —
-    they only change the sampled schedules and the per-realization step
-    vector.
+    encoder config, m, steps, trials, eval_every, seed, extra options, and
+    the fault/degrade specs (degrade is a static argument of the fused
+    runners; ``run_cellbatched`` rejects mixed-degrade batches as a
+    backstop).  Delay model / compute time / policy / k / step size are
+    FREE axes — they only change the sampled schedules and the
+    per-realization step vector.
     """
     if (cell.kind == "workload" or cell.skip is not None
             or cell.placement != "vmap"
@@ -358,7 +497,7 @@ def _cellbatch_key(cell: PlannedCell):
                         if k != "step_size"))
     return (cell.resolved_strategy, id(cell.problem), cell.m, cell.steps,
             cell.trials, cell.eval_every, cell.seed, _freeze(st.encoder),
-            opts)
+            cell.faults, cell.degrade, opts)
 
 
 def _cell_cfg(cell: PlannedCell) -> dict:
@@ -372,15 +511,17 @@ def _cell_cfg(cell: PlannedCell) -> dict:
     cfg.setdefault("policy", resolve_policy(
         st.policy or "fastest-k", cell.m, cell.k,
         deadline=st.deadline, beta=st.policy_beta))
+    if cell.degrade is not None:
+        cfg.setdefault("degrade", cell.degrade)
     return cfg
 
 
-def _execute_cell_group(cells: list, caches: dict) -> list:
+def _execute_cell_group(cells: list, runner: _CellRunner) -> list:
     """One compiled program for a group of compatible cells; any
     incompatibility the strategy detects at run time falls back to the
     per-cell path (same records, minus the sharing)."""
     from repro.runtime.strategies import get_strategy
-    spec_ = _synthetic_problem(cells[0], caches)
+    spec_ = _synthetic_problem(cells[0], runner.caches)
     engines = [_engine(cell) for cell in cells]
     cfgs = [_cell_cfg(cell) for cell in cells]
     strat = get_strategy(cells[0].resolved_strategy)
@@ -392,7 +533,7 @@ def _execute_cell_group(cells: list, caches: dict) -> list:
         print(f"# cell batch of {len(cells)} "
               f"{cells[0].resolved_strategy} cells fell back to per-cell "
               f"execution: {e}")
-        return [_execute_cell(cell, caches) for cell in cells]
+        return [runner.run(cell, persist=False) for cell in cells]
     outcomes = []
     for cell, result in zip(cells, results):
         base = {"strategy": cell.resolved_strategy, "delay": cell.delay,
@@ -414,19 +555,25 @@ def _execute_cell_group(cells: list, caches: dict) -> list:
     return outcomes
 
 
-def _execute_cellbatched(plan: ExperimentPlan, caches: dict) -> list:
-    """Group compatible cells, run each group as one program, and return
-    outcomes in plan order."""
+def _execute_cellbatched(plan: ExperimentPlan, runner: _CellRunner) -> list:
+    """Group compatible PENDING cells (resumed cells replay their streamed
+    records), run each group as one program, and return outcomes in plan
+    order."""
     groups: dict = {}
-    for cell in plan.cells:
-        groups.setdefault(_cellbatch_key(cell), []).append(cell)
     by_index: dict = {}
+    for cell in plan.cells:
+        resumed = runner.resumed(cell)
+        if resumed is not None:
+            by_index[cell.index] = resumed
+            continue
+        groups.setdefault(_cellbatch_key(cell), []).append(cell)
     for key, cells in groups.items():
         if key is None or len(cells) == 1:
             for cell in cells:
-                by_index[cell.index] = _execute_cell(cell, caches)
+                by_index[cell.index] = runner.run(cell)
         else:
-            for cell, oc in zip(cells, _execute_cell_group(cells, caches)):
+            for cell, oc in zip(cells, _execute_cell_group(cells, runner)):
+                runner.persist(oc)
                 by_index[cell.index] = oc
     return [by_index[cell.index] for cell in plan.cells]
 
@@ -474,6 +621,10 @@ def _execute_workload_cell(cell: PlannedCell, caches: dict) -> CellOutcome:
         cell_cfg.setdefault("policy", resolve_policy(
             st.policy, cell.m, k, deadline=st.deadline,
             beta=st.policy_beta))
+    if cell.degrade is not None and cell.resolved_strategy != "async":
+        # flows through the workload lowering into the registry strategy,
+        # which pops it (async has no barrier to degrade)
+        cell_cfg.setdefault("degrade", cell.degrade)
     try:
         if cell.trials > 1:
             results = wl.run_trials(st.name, engine, preset=ps, data=data,

@@ -98,6 +98,7 @@ METRICS_COLUMNS = [
     "step_latency_p50", "step_latency_p95", "step_latency_p99",
     "staleness_mean", "staleness_max", "staleness_clamped", "dropped",
     "delay_tail_p99_max", "delay_tail_p99_mean", "delay_tail_p99_workers",
+    "crashes", "blackout_s", "corrupt_count", "subk_fraction",
     "skipped",
 ]
 
@@ -128,6 +129,10 @@ def write_metrics_csv(records: list[dict], path: str) -> None:
             # delay_tail comes from whichever artifact stream the cell
             # produced (sync schedules or the async trace)
             tail = sched.get("delay_tail") or asy.get("delay_tail") or {}
+            faults = sched.get("faults", {})
+            # subk_fraction lives in the strategy meta (it knows the
+            # decode threshold); the obs summarizer has no k
+            subk = (r.get("meta") or {}).get("subk_fraction")
             w.writerow([
                 r.get("workload", ""), r["strategy"], r["delay"],
                 r.get("trials", 1),
@@ -143,7 +148,11 @@ def write_metrics_csv(records: list[dict], path: str) -> None:
                 _fmt(asy.get("staleness_clamped"), "d"),
                 _fmt(asy.get("dropped"), "d"),
                 _fmt(tail.get("p99_max")), _fmt(tail.get("p99_mean")),
-                _fmt(tail.get("workers"), "d"), "",
+                _fmt(tail.get("workers"), "d"),
+                _fmt(faults.get("crashes"), "d"),
+                _fmt(faults.get("blackout_s")),
+                _fmt(faults.get("corrupt_count"), "d"),
+                _fmt(subk), "",
             ])
 
 

@@ -48,6 +48,8 @@ class PlannedCell:
     compute_time: float
     skip: str | None = None      # pre-materialized skip reason
     metric_name: str = "objective"
+    faults: str | None = None    # DelayAxis fault-injection spec
+    degrade: str | None = None   # StrategyAxis sub-k degradation spec
 
     @property
     def kind(self) -> str:
@@ -85,10 +87,15 @@ class ExperimentPlan:
 
 def plan(spec: ExperimentSpec) -> ExperimentPlan:
     """Resolve the axis product into an explicit, validated cell list."""
+    from repro.runtime.faults import make_degrade, make_fault_model
     from repro.runtime.strategies import check_trials, get_strategy
     from repro.workloads import get_workload
 
     spec.validate()
+    # malformed fault / degrade specs poison every cell -> raise at plan time
+    make_fault_model(spec.delays.faults)
+    for st in spec.strategies:
+        make_degrade(st.degrade)
     tr, pl = spec.trials, spec.placement
     cells: list[PlannedCell] = []
     for pr in spec.problems:
@@ -110,7 +117,8 @@ def plan(spec: ExperimentSpec) -> ExperimentPlan:
                         placement=pl.mode,
                         compute_time=spec.delays.compute_time,
                         skip=wl.skip_reason(st.name),
-                        metric_name=wl.metric_name))
+                        metric_name=wl.metric_name,
+                        faults=spec.delays.faults, degrade=st.degrade))
         else:
             steps = spec.steps if spec.steps is not None else SYNTHETIC_STEPS
             check_trials(steps, tr.trials, tr.eval_every)
@@ -126,5 +134,6 @@ def plan(spec: ExperimentSpec) -> ExperimentPlan:
                         eval_every=tr.eval_every, seed=tr.seed,
                         placement=pl.mode,
                         compute_time=spec.delays.compute_time,
-                        metric_name="objective"))
+                        metric_name="objective",
+                        faults=spec.delays.faults, degrade=st.degrade))
     return ExperimentPlan(spec=spec, cells=tuple(cells))

@@ -52,7 +52,8 @@ def build_spec(args: argparse.Namespace) -> ExperimentSpec:
                      k=args.k, deadline=args.deadline,
                      policy_beta=args.policy_beta,
                      staleness_bound=args.staleness_bound,
-                     async_updates=args.async_updates)
+                     async_updates=args.async_updates,
+                     degrade=getattr(args, "degrade", None))
         for s in _csv_list(args.strategies))
     # the legacy front-ends share build_spec but not the obs flags, hence
     # getattr defaults — their specs get the all-off ObsAxis
@@ -63,7 +64,8 @@ def build_spec(args: argparse.Namespace) -> ExperimentSpec:
     return ExperimentSpec(
         problems=problems, strategies=strategies,
         delays=DelayAxis(delays=delays, m=args.m,
-                         compute_time=args.compute_time),
+                         compute_time=args.compute_time,
+                         faults=getattr(args, "faults", None)),
         trials=TrialsAxis(trials=args.trials, eval_every=args.eval_every,
                           seed=args.seed),
         placement=PlacementAxis(mode=args.placement,
@@ -146,6 +148,24 @@ def main(argv: Sequence[str] | None = None) -> ExperimentResult:
                     help="stack compatible matrix cells (same problem/"
                          "strategy/shape, differing delay/policy/step size) "
                          "into one compiled program (vmap placement only)")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="fault-injection spec layered on every delay "
+                         "model, e.g. 'crash:p=0.2,at=0.5;blackout:p=0.3,"
+                         "dur=0.4;corrupt:p=0.05' (repro.runtime.faults)")
+    ap.add_argument("--degrade", default=None, metavar="SPEC",
+                    help="sub-k degradation policy: 'renormalize' | "
+                         "'hold[:shrink=S,k_min=K]' | 'backoff[:base=B,"
+                         "retries=R]' (default: renormalized decode "
+                         "weights)")
+    ap.add_argument("--retries", type=int, default=0,
+                    help="re-run a cell whose execution RAISED up to N "
+                         "extra times (capped exponential backoff)")
+    ap.add_argument("--retry-base", type=float, default=0.5,
+                    help="first retry backoff in seconds")
+    ap.add_argument("--resume", default=None, metavar="RUN_ID",
+                    help="resume a killed matrix: replay the run store's "
+                         "streamed cell records (run id, unique prefix, or "
+                         "'latest') and execute only unfinished cells")
     ap.add_argument("--plan-only", action="store_true",
                     help="print the resolved cell list and exit")
     ap.add_argument("--out", default="runs/experiments")
@@ -168,7 +188,8 @@ def main(argv: Sequence[str] | None = None) -> ExperimentResult:
     if args.plan_only:
         print(pl.describe())
         return ExperimentResult(plan=pl, outcomes=[])
-    result = execute(pl)
+    result = execute(pl, retries=args.retries, retry_base=args.retry_base,
+                     resume=args.resume)
 
     os.makedirs(args.out, exist_ok=True)
     formats = {f.strip() for f in args.formats.split(",")}

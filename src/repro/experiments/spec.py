@@ -102,6 +102,10 @@ class StrategyAxis:
     policy_beta: float = 2.0           # --policy adaptive-k overlap beta
     staleness_bound: int | None = None   # async only
     async_updates: int | None = None     # async only
+    # sub-k degradation policy (repro.runtime.faults.make_degrade spec:
+    # 'renormalize' | 'hold[:shrink=..]' | 'backoff[:base=..,retries=..]');
+    # None keeps the default renormalized decode weights
+    degrade: str | None = None
     options: tuple = ()                # extra (key, value) cfg pairs
 
     def options_dict(self) -> dict:
@@ -119,12 +123,16 @@ class DelayAxis:
     delays: tuple = ()
     m: int | None = None
     compute_time: float = 0.05
+    # fault-injection spec (repro.runtime.faults.make_fault_model grammar,
+    # e.g. 'crash:p=0.2,at=0.5;corrupt:p=0.05'); None = delay-only cluster
+    faults: str | None = None
 
     @staticmethod
     def of(*delays: str, m: int | None = None,
-           compute_time: float = 0.05) -> "DelayAxis":
+           compute_time: float = 0.05,
+           faults: str | None = None) -> "DelayAxis":
         return DelayAxis(delays=tuple(delays), m=m,
-                         compute_time=compute_time)
+                         compute_time=compute_time, faults=faults)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -30,10 +30,12 @@ check — observability off is a zero-cost no-op path.
 """
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                       async_metrics, cell_summary, clamp_async_event,
-                      schedule_metrics)
+                      fault_metrics, schedule_metrics)
 from .profile import memory_high_water, memory_stats, profile_region
-from .runstore import (RunStore, default_store, provenance,
-                       record_experiment, runstore_enabled, spec_hash)
+from .runstore import (RunStore, begin_experiment, completed_cells,
+                       default_store, finish_experiment, provenance,
+                       record_cell, record_experiment, runstore_enabled,
+                       spec_hash)
 from .sketch import DelayTailEstimator, Ewma, P2Quantile, QuantileSketch
 from .timing import CompileWatch, block, emit, time_us
 from .trace import TraceEvent, TraceRecorder, current_recorder, span
@@ -41,11 +43,12 @@ from .trace import TraceEvent, TraceRecorder, current_recorder, span
 __all__ = [
     "TraceEvent", "TraceRecorder", "current_recorder", "span",
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
-    "schedule_metrics", "async_metrics", "cell_summary",
+    "schedule_metrics", "async_metrics", "fault_metrics", "cell_summary",
     "clamp_async_event",
     "P2Quantile", "QuantileSketch", "Ewma", "DelayTailEstimator",
     "RunStore", "default_store", "runstore_enabled", "provenance",
-    "spec_hash", "record_experiment",
+    "spec_hash", "record_experiment", "begin_experiment",
+    "finish_experiment", "record_cell", "completed_cells",
     "CompileWatch", "block", "time_us", "emit",
     "profile_region", "memory_stats", "memory_high_water",
 ]

@@ -26,8 +26,8 @@ from .sketch import DelayTailEstimator, QuantileSketch
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
-    "schedule_metrics", "async_metrics", "clamp_async_event",
-    "cell_summary",
+    "schedule_metrics", "async_metrics", "fault_metrics",
+    "clamp_async_event", "cell_summary",
 ]
 
 
@@ -160,7 +160,44 @@ class MetricsRegistry:
 # Engine-artifact summarizers
 # ---------------------------------------------------------------------------
 
-def schedule_metrics(schedules) -> dict:
+def fault_metrics(schedules, *, k: int | None = None) -> dict:
+    """Summarize the fault side of realized ``Schedule``s: crash count,
+    blackout seconds, per-kind failed-entry fractions and — given the
+    decode threshold ``k`` — the fraction of iterations that committed
+    below it (``subk_fraction``).  ``{}`` when no schedule carries a
+    ``failed`` array (the delay-only cluster)."""
+    from repro.runtime.faults import (FAULT_BLACKOUT, FAULT_CORRUPT,
+                                      FAULT_CRASHED)
+    rows = [s for s in schedules
+            if getattr(s, "failed", None) is not None]
+    if not rows:
+        return {}
+    failed = np.concatenate([np.asarray(s.failed) for s in rows], axis=0)
+    crashes = blackouts = blackout_s = 0
+    for s in rows:
+        for fe in getattr(s, "fault_events", ()):
+            if fe.kind == "crash":
+                crashes += 1
+            elif fe.kind == "blackout":
+                blackouts += 1
+                blackout_s += float(fe.duration)
+    total = float(failed.size) or 1.0
+    out = {
+        "crashes": int(crashes),
+        "blackouts": int(blackouts),
+        "blackout_s": float(blackout_s),
+        "crashed_frac": float((failed == FAULT_CRASHED).sum() / total),
+        "blackout_frac": float((failed == FAULT_BLACKOUT).sum() / total),
+        "corrupt_count": int((failed == FAULT_CORRUPT).sum()),
+    }
+    if k is not None:
+        masks = np.concatenate([np.asarray(s.masks) for s in rows], axis=0)
+        out["subk_fraction"] = float(
+            (masks.sum(axis=1) < int(k)).mean())
+    return out
+
+
+def schedule_metrics(schedules, *, k: int | None = None) -> dict:
     """Summarize realized synchronous ``Schedule``s (one or many — batched
     cells pass all R realizations, chunked workloads every sub-solve).
 
@@ -169,6 +206,8 @@ def schedule_metrics(schedules) -> dict:
     ``step_latency_s`` (commit-to-commit barrier time) percentiles, and
     the per-worker ``delay_tail`` snapshot (EWMA delay + p50/p95/p99 of
     each worker's arrival latency — the auto-tuner's sensing interface).
+    Schedules realized under a fault model additionally carry a ``faults``
+    block (:func:`fault_metrics`; ``k`` enables its ``subk_fraction``).
     Schedules whose worker count differs from the first are skipped (a
     matrix cell never mixes cluster sizes).
     """
@@ -176,20 +215,19 @@ def schedule_metrics(schedules) -> dict:
     if not schedules:
         return {}
     m = schedules[0].m
+    schedules = [s for s in schedules if s.m == m]
     masks = np.concatenate([np.asarray(s.masks, dtype=float)
-                            for s in schedules if s.m == m], axis=0)
+                            for s in schedules], axis=0)
     lat = Histogram()
     active = Histogram()
     tail = DelayTailEstimator(m)
     for s in schedules:
-        if s.m != m:
-            continue
         times = np.asarray(s.times, dtype=float)
         lat.observe_many(np.diff(times, prepend=0.0))
         active.observe_many(np.asarray(s.masks).sum(axis=1))
         tail.observe_schedule(s)
     miss = 1.0 - masks.mean(axis=0)
-    return {
+    out = {
         "iterations": int(masks.shape[0]),
         "workers": int(m),
         "miss_rate": [float(x) for x in miss],
@@ -199,6 +237,10 @@ def schedule_metrics(schedules) -> dict:
         "step_latency_s": lat.summary(),
         "delay_tail": tail.snapshot(),
     }
+    fm = fault_metrics(schedules, k=k)
+    if fm:
+        out["faults"] = fm
+    return out
 
 
 def clamp_async_event(u: int, tau: int, rv: int, total: int) -> tuple:
@@ -230,7 +272,9 @@ def async_metrics(traces) -> dict:
     tail = DelayTailEstimator(int(traces[0].m))
     dropped = 0
     clamped = 0
+    corrupted = 0
     for t in traces:
+        corrupted += int(getattr(t, "corrupted", 0))
         staleness = np.asarray(t.staleness, dtype=int)
         reads = np.asarray(t.read_versions, dtype=int)
         U = staleness.shape[0]
@@ -244,7 +288,7 @@ def async_metrics(traces) -> dict:
         if t.m == tail.m:
             tail.observe_async(t)
         dropped += int(t.dropped)
-    return {
+    out = {
         "updates": stale.count,
         "workers": int(traces[0].m),
         "staleness": {**stale.summary(), "hist": stale.counts()},
@@ -253,6 +297,9 @@ def async_metrics(traces) -> dict:
         "staleness_clamped": clamped,
         "delay_tail": tail.snapshot(),
     }
+    if corrupted:
+        out["corrupted"] = corrupted
+    return out
 
 
 def cell_summary(sources) -> dict:

@@ -10,7 +10,11 @@ Renders the two views the paper's tail-latency story needs from a
     miss counts with a bar chart, active-set-size stats, and the first
     iterations as an ASCII lane diagram (``#`` active, ``.`` erased);
   * **async summary** — staleness histogram + drop/clamp counts for
-    per-arrival cells.
+    per-arrival cells;
+  * **fault timeline** — for fault-injected runs (``--faults``): per-kind
+    event counts (crash / blackout / corrupt), the failed-entry share of
+    the (iteration, worker) grid, and the first fault events in time
+    order.
 
   * ``--html OUT.html`` — the same views as one self-contained HTML page
     (inline CSS, no external assets): phase-breakdown table, per-worker
@@ -98,6 +102,44 @@ def _render_sync_group(out, iters, workers, max_steps: int) -> None:
         out.append(f"    iter {t:4d} |{row}|")
 
 
+def _fault_summary(workers, instants):
+    """Fault view of one lane group: per-kind event counts, the event
+    timeline, and the failed-entry share of the (iteration, worker) grid.
+    Everything is empty when the trace carries no fault lane."""
+    events = [ev for ev in instants if ev.name.startswith("fault:")]
+    counts: dict = {}
+    for ev in events:
+        kind = ev.args.get("fault", ev.name.split(":", 1)[1])
+        counts[kind] = counts.get(kind, 0) + 1
+    frac: dict = {}
+    if workers:
+        by_kind: dict = {}
+        for ev in workers:
+            code = ev.args.get("failed")
+            if code is not None:
+                by_kind[code] = by_kind.get(code, 0) + 1
+        frac = {k: v / len(workers) for k, v in sorted(by_kind.items())}
+    return counts, events, frac
+
+
+def _render_fault_group(out, workers, instants, max_events: int = 12) -> None:
+    counts, events, frac = _fault_summary(workers, instants)
+    if not counts and not frac:
+        return
+    head = " ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+    out.append(f"  faults: {head or '(failed codes only)'}")
+    if frac:
+        out.append("  failed share of (iteration, worker) grid: "
+                   + " ".join(f"{k}={v:.1%}" for k, v in frac.items()))
+    for ev in sorted(events, key=lambda e: e.ts)[:max_events]:
+        dur = ev.args.get("duration_s")
+        tail = f" dur={dur:.2f}s" if dur else ""
+        out.append(f"    t={ev.ts:8.3f} {ev.lane:10s} "
+                   f"{ev.args.get('fault', ev.name)}{tail}")
+    if len(events) > max_events:
+        out.append(f"    ... {len(events) - max_events} more fault events")
+
+
 def _render_async_group(out, updates, instants) -> None:
     stale = np.asarray([ev.args.get("staleness", 0) for ev in updates])
     out.append(f"  updates={stale.size} mean_staleness={stale.mean():.2f} "
@@ -144,6 +186,8 @@ def render_report(rec: TraceRecorder, *, max_steps: int = 24,
         if kinds.get("update"):
             _render_async_group(out, kinds["update"],
                                 kinds.get("instant", []))
+        _render_fault_group(out, kinds.get("worker", []),
+                            kinds.get("instant", []))
     if len(out) <= 1 and not rows:
         out.append("(trace contains no span or simulation events)")
     return "\n".join(out)
@@ -220,6 +264,35 @@ def _html_async_group(updates, instants) -> str:
     return "".join(out)
 
 
+def _html_fault_group(workers, instants, max_events: int = 12) -> str:
+    counts, events, frac = _fault_summary(workers, instants)
+    if not counts and not frac:
+        return ""
+    head = " ".join(f"{_html.escape(str(k))}={v}"
+                    for k, v in sorted(counts.items()))
+    out = [f"<p><b>faults:</b> {head or '(failed codes only)'}</p>"]
+    if frac:
+        out.append("<table><tr><th>failed code</th><th>share of "
+                   "(iteration, worker) grid</th></tr>")
+        out += [f"<tr><td>{_html.escape(str(k))}</td>"
+                f"<td>{_html_bar(v, miss=True)} {v:.1%}</td></tr>"
+                for k, v in frac.items()]
+        out.append("</table>")
+    if events:
+        rows = "".join(
+            f"<tr><td>{ev.ts:.3f}</td><td>{_html.escape(ev.lane)}</td>"
+            f"<td>{_html.escape(str(ev.args.get('fault', ev.name)))}</td>"
+            f"<td>{ev.args.get('duration_s', '')}</td></tr>"
+            for ev in sorted(events, key=lambda e: e.ts)[:max_events])
+        out.append("<table><tr><th>t (sim s)</th><th>lane</th>"
+                   "<th>fault</th><th>duration_s</th></tr>"
+                   + rows + "</table>")
+        if len(events) > max_events:
+            out.append(f"<p><small>... {len(events) - max_events} more "
+                       f"fault events</small></p>")
+    return "".join(out)
+
+
 def render_html_report(rec: TraceRecorder, *, max_steps: int = 24,
                        cell: str | None = None,
                        extra_sections: list[str] | None = None) -> str:
@@ -250,6 +323,10 @@ def render_html_report(rec: TraceRecorder, *, max_steps: int = 24,
         if kinds.get("update"):
             sections.append(_html_async_group(kinds["update"],
                                               kinds.get("instant", [])))
+        fault_html = _html_fault_group(kinds.get("worker", []),
+                                       kinds.get("instant", []))
+        if fault_html:
+            sections.append(fault_html)
     if not sections:
         sections.append("<p>(trace contains no span or simulation "
                         "events)</p>")

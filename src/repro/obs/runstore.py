@@ -16,6 +16,14 @@ on regressions.  The store root comes from the ``REPRO_RUNSTORE`` env
 var: unset -> ``runs/store`` under the current directory, a path ->
 that directory, ``0``/empty -> recording disabled (benchmark timing
 loops disable it explicitly instead, via ``execute(record_to=False)``).
+
+Resumable runs (DESIGN.md §14): ``execute`` opens its manifest with
+``status: "running"`` BEFORE the first cell and streams each completed
+cell record to ``<run_id>/cells/<index>.json``; ``--resume RUN_ID``
+replays those files (after a spec-hash check) and only executes the
+cells that never finished.  ``python -m repro.obs.runstore prune`` keeps
+the store bounded (``--keep N`` / ``--older-than DAYS``) and repairs the
+index if run directories and index lines have drifted apart.
 """
 from __future__ import annotations
 
@@ -23,12 +31,15 @@ import dataclasses
 import hashlib
 import json
 import os
+import shutil
 import subprocess
 from datetime import datetime, timezone
 
 __all__ = [
     "RunStore", "default_store", "runstore_enabled", "provenance",
     "git_sha", "spec_signature", "spec_hash", "record_experiment",
+    "begin_experiment", "finish_experiment", "record_cell",
+    "completed_cells", "prune",
 ]
 
 ENV_VAR = "REPRO_RUNSTORE"
@@ -150,6 +161,10 @@ class RunStore:
 
     def manifest_path(self, run_id: str) -> str:
         return os.path.join(self.root, run_id, "manifest.json")
+
+    def cells_dir(self, run_id: str) -> str:
+        """Per-cell record directory of one run (resume granularity)."""
+        return os.path.join(self.root, run_id, "cells")
 
     # -- write ----------------------------------------------------------
 
@@ -285,3 +300,193 @@ def record_experiment(result, *, store: "RunStore | None" = None,
         "artifacts": {k: str(v) for k, v in (artifacts or {}).items()},
     }
     return store.record(manifest)
+
+
+# ---------------------------------------------------------------------------
+# Resumable runs: running manifest + streamed per-cell records
+# ---------------------------------------------------------------------------
+
+def begin_experiment(spec, *, store: "RunStore | None" = None,
+                     total_cells: int = 0) -> str | None:
+    """Open a ``status: "running"`` manifest BEFORE the first cell runs,
+    so a killed matrix leaves a resumable run id behind.  Returns the run
+    id (None when recording is disabled)."""
+    if store is None:
+        store = default_store()
+        if store is None:
+            return None
+    manifest = {
+        "kind": "experiment",
+        "status": "running",
+        "spec_hash": spec_hash(spec),
+        "spec": spec_signature(spec),
+        **provenance(),
+        "total_cells": int(total_cells),
+        "cells": [],
+    }
+    return store.record(manifest)
+
+
+def record_cell(store: "RunStore", run_id: str, index: int,
+                record: dict) -> None:
+    """Stream one completed cell record to ``<run_id>/cells/<index>.json``
+    (atomic rename so a kill mid-write never leaves a truncated record)."""
+    d = store.cells_dir(run_id)
+    os.makedirs(d, exist_ok=True)
+    path = os.path.join(d, f"{index:04d}.json")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(record, f)
+    os.replace(tmp, path)
+
+
+def completed_cells(store: "RunStore", run_id: str) -> dict:
+    """The streamed cell records of one run, ``{cell index: record}``
+    (corrupt/truncated files are treated as never-completed)."""
+    d = store.cells_dir(run_id)
+    if not os.path.isdir(d):
+        return {}
+    out: dict = {}
+    for name in sorted(os.listdir(d)):
+        if not name.endswith(".json"):
+            continue
+        try:
+            with open(os.path.join(d, name)) as f:
+                out[int(name[:-len(".json")])] = json.load(f)
+        except (ValueError, json.JSONDecodeError, OSError):
+            continue
+    return out
+
+
+def finish_experiment(result, store: "RunStore", run_id: str) -> str:
+    """Finalize a :func:`begin_experiment` manifest: cell summaries in,
+    ``status`` -> ``complete``."""
+    from .analyze import summarize_records
+    manifest = store.load(run_id)
+    manifest["status"] = "complete"
+    manifest["cells"] = summarize_records(result.records)
+    with open(store.manifest_path(manifest["run_id"]), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return run_id
+
+
+# ---------------------------------------------------------------------------
+# Store maintenance: prune + index consistency
+# ---------------------------------------------------------------------------
+
+def _run_dirs(store: "RunStore") -> list[str]:
+    if not os.path.isdir(store.root):
+        return []
+    return sorted(d for d in os.listdir(store.root)
+                  if os.path.isfile(store.manifest_path(d)))
+
+
+def prune(store: "RunStore", *, keep: int | None = None,
+          older_than_days: float | None = None,
+          dry_run: bool = False) -> dict:
+    """Bound the store: delete run directories beyond the newest ``keep``
+    and/or older than ``older_than_days``, then rewrite ``index.jsonl`` to
+    exactly match the surviving run directories (repairing any drift:
+    index lines whose directory is gone, directories the index never
+    heard of).  Returns ``{"kept": [...], "removed": [...], "repaired":
+    n}``; ``dry_run`` reports without touching disk."""
+    entries = {r["run_id"]: r for r in store.runs() if r.get("run_id")}
+    dirs = _run_dirs(store)
+    # timestamp per run: index entry if present, else the manifest's
+    stamps = {}
+    for rid in dirs:
+        ts = (entries.get(rid) or {}).get("timestamp")
+        if ts is None:
+            try:
+                ts = store.load(rid).get("timestamp")
+            except Exception:
+                ts = None
+        stamps[rid] = ts or ""
+    ordered = sorted(dirs, key=lambda rid: (stamps[rid], rid))
+    removed = set()
+    if older_than_days is not None:
+        from datetime import timedelta
+        cutoff = (datetime.now(timezone.utc)
+                  - timedelta(days=float(older_than_days)))
+        for rid in ordered:
+            try:
+                when = datetime.fromisoformat(stamps[rid])
+            except ValueError:
+                continue        # unparseable stamp: never age-prune it
+            if when < cutoff:
+                removed.add(rid)
+    if keep is not None:
+        survivors = [rid for rid in ordered if rid not in removed]
+        if keep >= 0 and len(survivors) > keep:
+            removed.update(survivors[:len(survivors) - keep])
+    kept = [rid for rid in ordered if rid not in removed]
+    # index repair: lines without a directory are drift either way
+    orphan_lines = [rid for rid in entries if rid not in set(dirs)]
+    orphan_dirs = [rid for rid in dirs if rid not in entries]
+    repaired = len(orphan_lines) + len(orphan_dirs)
+    if not dry_run:
+        for rid in sorted(removed):
+            shutil.rmtree(os.path.join(store.root, rid),
+                          ignore_errors=True)
+        lines = []
+        for rid in kept:
+            entry = entries.get(rid)
+            if entry is None:      # directory the index never heard of
+                m = store.load(rid)
+                entry = {k: m.get(k) for k in
+                         ("run_id", "kind", "spec_hash", "timestamp",
+                          "git_sha", "backend", "label")}
+            lines.append(json.dumps(entry))
+        os.makedirs(store.root, exist_ok=True)
+        tmp = store.index_path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write("".join(line + "\n" for line in lines))
+        os.replace(tmp, store.index_path)
+    return {"kept": kept, "removed": sorted(removed), "repaired": repaired}
+
+
+def main(argv=None) -> int:
+    """``python -m repro.obs.runstore`` — store maintenance CLI."""
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="repro.obs.runstore",
+        description="run-store maintenance (REPRO_RUNSTORE or --store)")
+    ap.add_argument("--store", default=None,
+                    help="store root (default: REPRO_RUNSTORE / runs/store)")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    lp = sub.add_parser("list", help="print the index, oldest first")
+    pp = sub.add_parser("prune",
+                        help="bound the store and repair the index")
+    pp.add_argument("--keep", type=int, default=None, metavar="N",
+                    help="keep only the N newest runs")
+    pp.add_argument("--older-than", type=float, default=None,
+                    metavar="DAYS", help="drop runs older than DAYS days")
+    pp.add_argument("--dry-run", action="store_true",
+                    help="report what would be removed; touch nothing")
+    del lp
+    args = ap.parse_args(argv)
+    store = (RunStore(args.store) if args.store is not None
+             else default_store())
+    if store is None:
+        print("runstore: recording disabled (REPRO_RUNSTORE=0)")
+        return 1
+    if args.cmd == "list":
+        for r in store.runs():
+            print(json.dumps(r))
+        return 0
+    if args.keep is None and args.older_than is None:
+        # a bare prune is still useful: it repairs index drift
+        print("# no --keep/--older-than: repairing the index only")
+    out = prune(store, keep=args.keep, older_than_days=args.older_than,
+                dry_run=args.dry_run)
+    tag = "would remove" if args.dry_run else "removed"
+    print(f"runstore prune: kept {len(out['kept'])}, {tag} "
+          f"{len(out['removed'])}, repaired {out['repaired']} index "
+          f"entries in {store.root}")
+    for rid in out["removed"]:
+        print(f"  - {rid}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

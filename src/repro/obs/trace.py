@@ -303,8 +303,14 @@ class TraceRecorder:
 # ---------------------------------------------------------------------------
 
 def _expand_schedule(src: _SimSource) -> Iterator[TraceEvent]:
+    from repro.runtime.faults import FAULT_KINDS
     sched, r, cell = src.obj, src.realization, src.cell
     masks = np.asarray(sched.masks)
+    # fault-model schedules carry per-(iter, worker) failure codes and the
+    # realized fault timeline (getattr: hand-built schedules predate them)
+    failed = getattr(sched, "failed", None)
+    if failed is not None:
+        failed = np.asarray(failed)
     for ev in sched.events:
         arrivals = np.asarray(ev.arrivals)
         row = masks[ev.t]
@@ -315,11 +321,29 @@ def _expand_schedule(src: _SimSource) -> Iterator[TraceEvent]:
             args={"active": [int(a) for a in ev.active],
                   "active_size": int(len(ev.active))})
         for i in range(sched.m):
+            args = {"active": bool(row[i])}
+            if failed is not None and failed[ev.t, i]:
+                args["failed"] = FAULT_KINDS.get(int(failed[ev.t, i]),
+                                                 str(int(failed[ev.t, i])))
+            # a crashed/blacked-out worker never arrives: clamp its lane
+            # event to the barrier instead of an infinite bar
+            dur = float(arrivals[i] - ev.start)
+            if not np.isfinite(dur):
+                dur = float(ev.commit - ev.start)
             yield TraceEvent(
                 kind="worker", name="compute", ts=float(ev.start),
-                dur=float(arrivals[i] - ev.start), lane=f"worker:{i}",
-                realization=r, step=int(ev.t), cell=cell,
-                args={"active": bool(row[i])})
+                dur=dur, lane=f"worker:{i}",
+                realization=r, step=int(ev.t), cell=cell, args=args)
+    for fe in getattr(sched, "fault_events", ()):
+        args = {"fault": fe.kind}
+        if fe.duration:
+            args["duration_s"] = float(fe.duration)
+        if fe.t >= 0:
+            args["step"] = int(fe.t)
+        yield TraceEvent(
+            kind="instant", name=f"fault:{fe.kind}", ts=float(fe.time),
+            lane=f"worker:{int(fe.worker)}", realization=r, cell=cell,
+            args=args)
 
 
 def _expand_async(src: _SimSource) -> Iterator[TraceEvent]:
@@ -346,8 +370,20 @@ def _expand_async(src: _SimSource) -> Iterator[TraceEvent]:
             kind="update", name="apply", ts=float(times[u]), dur=0.0,
             lane=f"worker:{int(workers[u])}", realization=r, step=u,
             cell=cell, args={"staleness": tau, "read_version": rv})
+    for fe in getattr(tr, "fault_events", ()):
+        args = {"fault": fe.kind}
+        if fe.duration:
+            args["duration_s"] = float(fe.duration)
+        yield TraceEvent(
+            kind="instant", name=f"fault:{fe.kind}", ts=float(fe.time),
+            lane=f"worker:{int(fe.worker)}", realization=r, cell=cell,
+            args=args)
+    summary = {"updates": U, "dropped": int(tr.dropped),
+               "staleness_clamped": clamped}
+    corrupted = int(getattr(tr, "corrupted", 0))
+    if corrupted:
+        summary["corrupted"] = corrupted
     yield TraceEvent(
         kind="instant", name="async-summary",
         ts=float(times[-1]) if U else 0.0, lane="master", realization=r,
-        cell=cell, args={"updates": U, "dropped": int(tr.dropped),
-                         "staleness_clamped": clamped})
+        cell=cell, args=summary)

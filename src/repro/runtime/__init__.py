@@ -17,6 +17,9 @@ from .engine import (DELAY_MODELS, POLICIES, ActiveSetPolicy, AdaptiveK,
                      AdversarialRotation, AsyncBatch, AsyncTrace,
                      ClusterEngine, Deadline, FastestK, IterationEvent,
                      Schedule, ScheduleBatch, make_delay_model, make_policy)
+from .faults import (FAULT_KINDS, BlackoutFault, CorruptionFault, CrashFault,
+                     DegradePolicy, FaultEvent, FaultModel, ZoneFault,
+                     make_degrade, make_fault_model)
 from .runners import (batched_scan_async, batched_scan_bcd, batched_scan_gd,
                       batched_scan_prox, scan_async, scan_bcd, scan_gd,
                       scan_prox, sharded_scan_async, sharded_scan_gd,
@@ -36,6 +39,9 @@ __all__ = [
     "Strategy", "TrialsResult", "available_strategies", "check_trials",
     "get_strategy", "register_strategy", "resolve_eval_every",
     "summary_stats", "run_matrix",
+    "FAULT_KINDS", "BlackoutFault", "CorruptionFault", "CrashFault",
+    "DegradePolicy", "FaultEvent", "FaultModel", "ZoneFault", "make_degrade",
+    "make_fault_model",
 ]
 
 

@@ -28,6 +28,9 @@ from repro.core.straggler import (DelayModel, adaptive_k, bimodal_delays,
                                   constant_delays, exponential_delays,
                                   fastest_k, multimodal_delays,
                                   power_law_delays)
+from repro.runtime.faults import (FAULT_BLACKOUT, FAULT_CORRUPT,
+                                  FAULT_CRASHED, FaultEvent,
+                                  make_fault_model)
 # obs hooks: with no active TraceRecorder, each is a single None-check
 from repro.obs.trace import current_recorder as _obs_recorder
 from repro.obs.trace import span as _obs_span
@@ -75,6 +78,8 @@ class FastestK(ActiveSetPolicy):
     """Wait for the k smallest delays — the paper's default master (§3.1)."""
 
     def __init__(self, k: int):
+        if int(k) < 1:
+            raise ValueError(f"fastest-k needs k >= 1, got {k}")
         self.k = int(k)
 
     def select(self, t, delays, prev_active):
@@ -87,7 +92,9 @@ class AdaptiveK(ActiveSetPolicy):
 
     def __init__(self, beta: float, k_min: int = 1):
         self.beta = float(beta)
-        self.k_min = int(k_min)
+        # floor of 1: a 0/negative k_min would let the policy return an
+        # empty set on a quiet round, which only the fault paths expect
+        self.k_min = max(1, int(k_min))
 
     def select(self, t, delays, prev_active):
         return adaptive_k(delays, prev_active, self.beta, self.k_min)
@@ -100,7 +107,7 @@ class Deadline(ActiveSetPolicy):
 
     def __init__(self, deadline: float, k_min: int = 1):
         self.deadline = float(deadline)
-        self.k_min = int(k_min)
+        self.k_min = max(1, int(k_min))   # same floor as AdaptiveK
 
     def select(self, t, delays, prev_active):
         active = np.nonzero(delays <= self.deadline)[0]
@@ -115,6 +122,8 @@ class AdversarialRotation(ActiveSetPolicy):
     sample-path guarantee (same sequence as ``core.adversarial_sets``)."""
 
     def __init__(self, k: int):
+        if int(k) < 1:
+            raise ValueError(f"adversarial rotation needs k >= 1, got {k}")
         self.k = int(k)
 
     def select(self, t, delays, prev_active):
@@ -137,6 +146,16 @@ def make_policy(name: str, **kw) -> ActiveSetPolicy:
     if name not in POLICIES:
         raise KeyError(f"unknown policy '{name}'; have {sorted(POLICIES)}")
     return POLICIES[name](**kw)
+
+
+def _policy_k_min(policy: ActiveSetPolicy) -> int:
+    """The decode threshold a policy aims for — ``k`` for fastest-k /
+    adversarial, ``k_min`` for adaptive-k / deadline — used as the
+    survivor floor that triggers degradation under faults."""
+    for attr in ("k", "k_min"):
+        if hasattr(policy, attr):
+            return max(1, int(getattr(policy, attr)))
+    return 1
 
 
 # ---------------------------------------------------------------------------
@@ -167,6 +186,12 @@ class Schedule:
     masks: np.ndarray         # (T, m) float32 0/1 erasure masks
     times: np.ndarray         # (T,) elapsed seconds at each commit
     _events: object           # tuple[IterationEvent, ...] | () -> tuple
+    # fault lane (repro.runtime.faults): per-(t, worker) int8 codes —
+    # FAULT_OK covers active AND healthy-but-slow (the mask disambiguates);
+    # crashed/blackout/corrupt name genuine failures, distinct from "slow".
+    # None = sampled without a fault model (the default, zero-cost path).
+    failed: np.ndarray | None = None   # (T, m) int8 fault codes
+    fault_events: tuple = ()           # tuple[FaultEvent, ...]
 
     @property
     def events(self) -> tuple:
@@ -190,6 +215,8 @@ class AsyncTrace:
     read_versions: np.ndarray  # (U,) int32   parameter timestamp worker read
     times: np.ndarray          # (U,) float64 elapsed seconds at apply
     dropped: int               # gradients discarded for exceeding the bound
+    corrupted: int = 0         # arrivals discarded as corrupt (fault lane)
+    fault_events: tuple = ()   # tuple[FaultEvent, ...]
 
     @property
     def updates(self) -> int:
@@ -206,6 +233,7 @@ class ScheduleBatch:
     masks: np.ndarray         # (R, T, m) float32 0/1 erasure masks
     times: np.ndarray         # (R, T) elapsed seconds at each commit
     schedules: tuple          # tuple[Schedule, ...], one per realization
+    failed: np.ndarray | None = None   # (R, T, m) int8, None without faults
 
     @property
     def trials(self) -> int:
@@ -230,6 +258,7 @@ class AsyncBatch:
     times: np.ndarray          # (R, U) float64 elapsed seconds at apply
     dropped: np.ndarray        # (R,) gradients discarded per realization
     traces: tuple              # tuple[AsyncTrace, ...], one per realization
+    corrupted: np.ndarray | None = None   # (R,) corrupt arrivals discarded
 
     @property
     def trials(self) -> int:
@@ -259,12 +288,17 @@ class ClusterEngine:
 
     def __init__(self, delay_model: DelayModel, m: int, *,
                  compute_time: float = 0.05, master_overhead: float = 0.01,
-                 seed: int = 0, tail_estimator=None):
+                 seed: int = 0, tail_estimator=None, faults=None):
         self.delay_model = delay_model
         self.m = int(m)
         self.compute_time = float(compute_time)
         self.master_overhead = float(master_overhead)
         self.seed = int(seed)
+        # fault injection (repro.runtime.faults): a FaultModel or spec
+        # string composes crashes / blackouts / zone loss / corruption on
+        # top of the delay model.  None (the default) keeps every sampler
+        # on the exact pre-fault code path — a single is-None check.
+        self.faults = make_fault_model(faults)
         # online delay-tail sensing (repro.obs.sketch.DelayTailEstimator):
         # when set, every realized schedule / async trace updates it
         # in-stream — the adaptive-redundancy controller's input.  None
@@ -299,24 +333,33 @@ class ClusterEngine:
                               compute_time=self.compute_time,
                               master_overhead=self.master_overhead,
                               seed=self._trial_seed(realization),
-                              tail_estimator=self.tail_estimator)
+                              tail_estimator=self.tail_estimator,
+                              faults=self.faults)
         child._obs_realization = self._obs_realization + realization
         return child
 
     # -- synchronous (barrier) mode -------------------------------------
 
     def sample_schedule(self, steps: int, policy: ActiveSetPolicy, *,
-                        realization: int = 0) -> Schedule:
+                        realization: int = 0, degrade=None) -> Schedule:
         """Realize ``steps`` BSP iterations under ``policy``.
 
         Iteration t starts at the previous commit; worker i's gradient
         arrives ``compute_time + delay_i`` later; the master commits at the
-        latest arrival over A_t plus ``master_overhead``.
+        latest arrival over A_t plus ``master_overhead``.  With a fault
+        model attached the schedule additionally carries a ``failed`` code
+        array and fault events; ``degrade`` (a ``backoff``-mode
+        :class:`~repro.runtime.faults.DegradePolicy`) lets the master
+        extend its deadline when survivors fall below the threshold.
         """
         with _obs_span("sample-schedule", steps=steps, m=self.m):
-            rng = np.random.default_rng(self._trial_seed(realization))
+            trial_seed = self._trial_seed(realization)
+            rng = np.random.default_rng(trial_seed)
             policy.reset()
-            if type(policy) is FastestK:
+            if self.faults is not None:
+                sched = self._sample_faulted(rng, steps, policy,
+                                             trial_seed, degrade)
+            elif type(policy) is FastestK:
                 sched = self._sample_fastest_k(rng, steps, policy.k)
             else:
                 sched = self._sample_generic(rng, steps, policy)
@@ -387,8 +430,88 @@ class ClusterEngine:
                 for t in range(steps))
         return Schedule(self.m, masks, times, events)
 
+    def _sample_faulted(self, rng, steps: int, policy: ActiveSetPolicy,
+                        trial_seed: int, degrade) -> Schedule:
+        """The fault-aware per-step loop (only reached when a fault model
+        is attached; the no-fault paths above stay byte-identical).
+
+        Per iteration: crashed workers are permanently gone, blacked-out
+        workers are unavailable for rounds that start inside their window
+        (both are given infinite delay BEFORE policy selection and filtered
+        from its pick — ``Deadline``'s fastest-k fallback must never wait
+        on a dead worker); corrupt results arrive (the barrier pays for
+        them) but are flagged and masked out of the combine.  The master
+        detects failures instantly (a heartbeat assumption, DESIGN.md §14),
+        so an all-failed round commits after one idle compute window.
+        """
+        fr = self.faults.realize(self.m, trial_seed)
+        ct, oh = self.compute_time, self.master_overhead
+        backoff = (degrade if degrade is not None
+                   and degrade.mode == "backoff" else None)
+        k_floor = _policy_k_min(policy)
+        if backoff is not None and backoff.k_min is not None:
+            k_floor = int(backoff.k_min)
+        now = 0.0
+        prev_active: np.ndarray | None = None
+        masks = np.zeros((steps, self.m), dtype=np.float32)
+        failed = np.zeros((steps, self.m), dtype=np.int8)
+        times = np.zeros(steps)
+        events, corrupt_events = [], []
+        for t in range(steps):
+            delays = np.asarray(self.delay_model(rng, self.m), dtype=float)
+            crashed = fr.crashed_at(now)
+            dark = fr.blackout_at(now) & ~crashed
+            failed[t, crashed] = FAULT_CRASHED
+            failed[t, dark] = FAULT_BLACKOUT
+            avail = ~(crashed | dark)
+            eff = np.where(avail, delays, np.inf)
+            active = np.asarray(policy.select(t, eff, prev_active),
+                                dtype=int)
+            active = active[avail[active]]
+            arrivals = now + ct + delays
+            if backoff is not None and active.size < k_floor:
+                # deadline extension: wait up to base * 2^j for blacked-out
+                # workers to recover, restart, and report in
+                recov = fr.recovery_time(now)
+                rec_arrivals = recov + ct + delays
+                window = backoff.base
+                for _ in range(max(1, int(backoff.retries))):
+                    rejoin = np.nonzero(dark & (recov <= now + window))[0]
+                    extra = np.setdiff1d(rejoin, active)
+                    if extra.size:
+                        arrivals = arrivals.copy()
+                        arrivals[extra] = rec_arrivals[extra]
+                        active = np.sort(np.concatenate([active, extra]))
+                    if active.size >= k_floor:
+                        break
+                    window *= 2.0
+            if active.size:
+                commit = float(arrivals[active].max()) + oh
+                corrupt = fr.corrupt_draw(active.size)
+                if corrupt.any():
+                    for w in active[corrupt]:
+                        failed[t, w] = FAULT_CORRUPT
+                        corrupt_events.append(FaultEvent(
+                            "corrupt", int(w), float(arrivals[w]), t=t))
+                    active = active[~corrupt]
+                masks[t, active] = 1.0
+            else:
+                # every worker failed: the master idles one compute window
+                # and commits an empty round (mask row all-zero)
+                commit = now + ct + oh
+            times[t] = commit
+            events.append(IterationEvent(t=t, start=now, commit=commit,
+                                         active=active, arrivals=arrivals))
+            now = commit
+            prev_active = active
+        horizon = float(times[-1]) if steps else 0.0
+        fault_events = sorted(fr.static_events(horizon) + corrupt_events,
+                              key=lambda e: (e.time, e.worker))
+        return Schedule(self.m, masks, times, tuple(events),
+                        failed=failed, fault_events=tuple(fault_events))
+
     def sample_schedules(self, steps: int, policy: ActiveSetPolicy,
-                         trials: int) -> ScheduleBatch:
+                         trials: int, *, degrade=None) -> ScheduleBatch:
         """Realize ``trials`` independent schedules as one (R, T, m) stack.
 
         The realization axis is the Monte-Carlo axis of the paper's §5
@@ -400,13 +523,16 @@ class ClusterEngine:
         """
         if trials < 1:
             raise ValueError("trials must be >= 1")
-        scheds = tuple(self.sample_schedule(steps, policy, realization=r)
+        scheds = tuple(self.sample_schedule(steps, policy, realization=r,
+                                            degrade=degrade)
                        for r in range(trials))
         return ScheduleBatch(
             m=self.m,
             masks=np.stack([s.masks for s in scheds]),
             times=np.stack([s.times for s in scheds]),
-            schedules=scheds)
+            schedules=scheds,
+            failed=(np.stack([s.failed for s in scheds])
+                    if scheds[0].failed is not None else None))
 
     # -- asynchronous (per-arrival) mode --------------------------------
 
@@ -425,31 +551,55 @@ class ClusterEngine:
         if staleness_bound < 0:
             raise ValueError("staleness_bound must be >= 0")
         with _obs_span("sample-async", updates=updates, m=self.m):
-            rng = np.random.default_rng(self._trial_seed(realization))
+            trial_seed = self._trial_seed(realization)
+            rng = np.random.default_rng(trial_seed)
+            # fault realization (None = the exact pre-fault event loop):
+            # crashed workers take their in-flight gradient down with them
+            # and never re-queue; blacked-out workers restart at window
+            # end; corrupt arrivals are discarded without a version bump.
+            fr = (self.faults.realize(self.m, trial_seed)
+                  if self.faults is not None else None)
             read_version = np.zeros(self.m, dtype=np.int64)  # per-worker ts
             version = 0
             heap: list[tuple[float, int]] = []
             first = np.asarray(self.delay_model(rng, self.m), dtype=float)
+            start0 = fr.recovery_time(0.0) if fr is not None else None
             for i in range(self.m):
-                heapq.heappush(heap, (self.compute_time + first[i], i))
+                if start0 is None:
+                    heapq.heappush(heap, (self.compute_time + first[i], i))
+                elif np.isfinite(start0[i]):
+                    heapq.heappush(
+                        heap, (start0[i] + self.compute_time + first[i], i))
 
             workers, stale, reads, times = [], [], [], []
-            dropped = 0
+            dropped = corrupted = 0
             while len(workers) < updates:
+                if not heap:
+                    raise ValueError(
+                        f"async cluster died: every worker crashed after "
+                        f"{len(workers)} of {updates} updates")
                 arrival, i = heapq.heappop(heap)
-                tau = version - read_version[i]
-                if tau <= staleness_bound:
-                    workers.append(i)
-                    stale.append(tau)
-                    reads.append(read_version[i])
-                    times.append(arrival + self.master_overhead)
-                    version += 1
+                if fr is not None and fr.crash_time[i] <= arrival:
+                    continue   # worker died mid-compute; result lost
+                if fr is not None and fr.corrupt_draw(1)[0]:
+                    corrupted += 1
                 else:
-                    dropped += 1
+                    tau = version - read_version[i]
+                    if tau <= staleness_bound:
+                        workers.append(i)
+                        stale.append(tau)
+                        reads.append(read_version[i])
+                        times.append(arrival + self.master_overhead)
+                        version += 1
+                    else:
+                        dropped += 1
                 # worker re-reads the (possibly updated) parameters, restarts
                 read_version[i] = version
                 delay = float(np.asarray(self.delay_model(rng, 1))[0])
-                heapq.heappush(heap, (arrival + self.compute_time + delay, i))
+                restart = arrival
+                if fr is not None:
+                    restart = float(fr.recovery_time(arrival)[i])
+                heapq.heappush(heap, (restart + self.compute_time + delay, i))
             trace = AsyncTrace(
                 m=self.m,
                 workers=np.asarray(workers, dtype=np.int32),
@@ -457,6 +607,10 @@ class ClusterEngine:
                 read_versions=np.asarray(reads, dtype=np.int32),
                 times=np.asarray(times),
                 dropped=dropped,
+                corrupted=corrupted,
+                fault_events=(tuple(fr.static_events(
+                    float(times[-1]) if times else 0.0))
+                    if fr is not None else ()),
             )
         if self.tail_estimator is not None:
             self.tail_estimator.observe_async(trace)
@@ -483,4 +637,5 @@ class ClusterEngine:
             staleness=np.stack([t.staleness for t in traces]),
             times=np.stack([t.times for t in traces]),
             dropped=np.asarray([t.dropped for t in traces]),
-            traces=traces)
+            traces=traces,
+            corrupted=np.asarray([t.corrupted for t in traces]))

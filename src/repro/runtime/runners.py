@@ -98,6 +98,48 @@ def _prox_step(prob: EncodedProblem, w, mask, step_size):
     return prox_l1(w - step_size * g, step_size * prob.lam)
 
 
+# -- sub-k degradation (repro.runtime.faults, DESIGN.md §14) ----------------
+#
+# ``degrade`` reaches the runners as a static hashable tuple
+# ("hold", k_min, shrink) or None; only hold-mode needs runner support (a
+# gradient carry), renormalize is the default masked-mean math and backoff
+# lives in the engine.  None keeps every runner on its pre-fault trace.
+
+def _degrade_tuple(degrade):
+    """Normalize DegradePolicy | tuple | None to the static runner arg."""
+    if degrade is None or isinstance(degrade, tuple):
+        return degrade
+    if getattr(degrade, "mode", None) == "hold":
+        return ("hold", int(degrade.k_min or 1), float(degrade.shrink))
+    return None
+
+
+def _hold_gd_step(prob: EncodedProblem, carry, mask, step_size, h: str,
+                  k_min: int, shrink: float):
+    """GD step on a (w, g_prev) carry: below ``k_min`` survivors the last
+    good gradient is reused at ``shrink`` x its previous scale, and the
+    shrunk gradient re-enters the carry — consecutive sub-k rounds decay
+    geometrically (total held displacement <= step * shrink/(1-shrink) *
+    ||g_last||, so a long blackout can never run away on a stale
+    direction).  An initial sub-k round holds still (g_prev0 = 0)."""
+    w, g_prev = carry
+    g_raw = _masked_grad(prob, w, mask)
+    if h == "l2":
+        g_raw = g_raw + prob.lam * w
+    subk = mask.sum() < k_min
+    g = jnp.where(subk, shrink * g_prev, g_raw)
+    return (w - step_size * g, g)
+
+
+def _hold_prox_step(prob: EncodedProblem, carry, mask, step_size,
+                    k_min: int, shrink: float):
+    w, g_prev = carry
+    g_raw = _masked_grad(prob, w, mask)
+    subk = mask.sum() < k_min
+    g = jnp.where(subk, shrink * g_prev, g_raw)
+    return (prox_l1(w - step_size * g, step_size * prob.lam), g)
+
+
 def _async_step(prob: EncodedProblem, carry, ev, step_size, buffer_size: int,
                 h: str):
     """One applied update of stale-gradient SGD on the ring-buffer carry."""
@@ -146,39 +188,61 @@ def _strided_scan(step, evalf, carry0, xs, eval_every: int):
 # Single-realization fused runners
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("h", "eval_every"))
+@partial(jax.jit, static_argnames=("h", "eval_every", "degrade"))
 def _scan_gd(prob: EncodedProblem, masks: jax.Array, step_size,
-             w0: jax.Array, h: str = "l2", eval_every: int = 1):
+             w0: jax.Array, h: str = "l2", eval_every: int = 1,
+             degrade=None):
+    if degrade is not None:
+        _, k_min, shrink = degrade
+        (wT, _), trace = _strided_scan(
+            lambda c, mask: _hold_gd_step(prob, c, mask, step_size, h,
+                                          k_min, shrink),
+            lambda c: original_objective(prob, c[0], h=h),
+            (w0, jnp.zeros_like(w0)), masks, eval_every)
+        return wT, trace
     return _strided_scan(lambda w, mask: _gd_step(prob, w, mask, step_size, h),
                          lambda w: original_objective(prob, w, h=h),
                          w0, masks, eval_every)
 
 
 def scan_gd(prob: EncodedProblem, masks: jax.Array, step_size,
-            w0: jax.Array, h: str = "l2", eval_every: int = 1):
+            w0: jax.Array, h: str = "l2", eval_every: int = 1,
+            degrade=None):
     """Encoded GD over a (T, m) mask schedule, fused into one scan.
 
     Returns (w_T, trace) with trace[t] = f(w_{t+1}) on the original problem —
     the same convention as the legacy per-step loop (``eval_every=s``
-    strides the trace like the batched runners).
+    strides the trace like the batched runners).  ``degrade`` selects the
+    sub-k behavior (hold-mode gradient carry); None is the default
+    renormalized math.
     """
     return _traced_call(_runner_name("runner:gd"), _scan_gd, prob, masks,
-                        step_size, w0, h=h, eval_every=eval_every)
+                        step_size, w0, h=h, eval_every=eval_every,
+                        degrade=_degrade_tuple(degrade))
 
 
-@partial(jax.jit, static_argnames=("eval_every",))
+@partial(jax.jit, static_argnames=("eval_every", "degrade"))
 def _scan_prox(prob: EncodedProblem, masks: jax.Array, step_size,
-               w0: jax.Array, eval_every: int = 1):
+               w0: jax.Array, eval_every: int = 1, degrade=None):
+    if degrade is not None:
+        _, k_min, shrink = degrade
+        (wT, _), trace = _strided_scan(
+            lambda c, mask: _hold_prox_step(prob, c, mask, step_size,
+                                            k_min, shrink),
+            lambda c: original_objective(prob, c[0], h="l1"),
+            (w0, jnp.zeros_like(w0)), masks, eval_every)
+        return wT, trace
     return _strided_scan(lambda w, mask: _prox_step(prob, w, mask, step_size),
                          lambda w: original_objective(prob, w, h="l1"),
                          w0, masks, eval_every)
 
 
 def scan_prox(prob: EncodedProblem, masks: jax.Array, step_size,
-              w0: jax.Array, eval_every: int = 1):
+              w0: jax.Array, eval_every: int = 1, degrade=None):
     """Encoded proximal gradient (ISTA, l1) over a mask schedule."""
     return _traced_call(_runner_name("runner:prox"), _scan_prox, prob, masks,
-                        step_size, w0, eval_every=eval_every)
+                        step_size, w0, eval_every=eval_every,
+                        degrade=_degrade_tuple(degrade))
 
 
 # LiftedProblem carries Python callables (phi), so the scan cannot be jitted
@@ -262,8 +326,17 @@ def _step_vector(step_size, R: int):
 
 
 def _batched_gd(prob: EncodedProblem, masks: jax.Array, step_size,
-                w0: jax.Array, h: str = "l2", eval_every: int = 1):
+                w0: jax.Array, h: str = "l2", eval_every: int = 1,
+                degrade=None):
     def one(masks_r, w0_r, step_r):
+        if degrade is not None:
+            _, k_min, shrink = degrade
+            (wT, _), trace = _strided_scan(
+                lambda c, mask: _hold_gd_step(prob, c, mask, step_r, h,
+                                              k_min, shrink),
+                lambda c: original_objective(prob, c[0], h=h),
+                (w0_r, jnp.zeros_like(w0_r)), masks_r, eval_every)
+            return wT, trace
         return _strided_scan(
             lambda w, mask: _gd_step(prob, w, mask, step_r, h),
             lambda w: original_objective(prob, w, h=h),
@@ -272,33 +345,39 @@ def _batched_gd(prob: EncodedProblem, masks: jax.Array, step_size,
     return jax.vmap(one)(masks, w0, _step_vector(step_size, masks.shape[0]))
 
 
-@partial(jax.jit, static_argnames=("h", "eval_every"), donate_argnums=(3,))
+@partial(jax.jit, static_argnames=("h", "eval_every", "degrade"),
+         donate_argnums=(3,))
 def _batched_scan_gd(prob: EncodedProblem, masks: jax.Array, step_size,
-                     w0: jax.Array, h: str = "l2", eval_every: int = 1):
-    return _batched_gd(prob, masks, step_size, w0, h, eval_every)
+                     w0: jax.Array, h: str = "l2", eval_every: int = 1,
+                     degrade=None):
+    return _batched_gd(prob, masks, step_size, w0, h, eval_every, degrade)
 
 
 # R == 1 wrappers: the squeeze/unsqueeze happens INSIDE one traced program
 # (free at runtime) — host-side masks[0] / w[None] reshapes around _scan_gd
 # would cost several extra dispatches per call, eating the win
-@partial(jax.jit, static_argnames=("h", "eval_every"), donate_argnums=(3,))
+@partial(jax.jit, static_argnames=("h", "eval_every", "degrade"),
+         donate_argnums=(3,))
 def _scan_gd_r1(prob: EncodedProblem, masks: jax.Array, step_size,
-                w0: jax.Array, h: str = "l2", eval_every: int = 1):
+                w0: jax.Array, h: str = "l2", eval_every: int = 1,
+                degrade=None):
     w, tr = _scan_gd(prob, masks[0], jnp.asarray(step_size).reshape(()),
-                     w0[0], h=h, eval_every=eval_every)
+                     w0[0], h=h, eval_every=eval_every, degrade=degrade)
     return w[None], tr[None]
 
 
-@partial(jax.jit, static_argnames=("eval_every",), donate_argnums=(3,))
+@partial(jax.jit, static_argnames=("eval_every", "degrade"),
+         donate_argnums=(3,))
 def _scan_prox_r1(prob: EncodedProblem, masks: jax.Array, step_size,
-                  w0: jax.Array, eval_every: int = 1):
+                  w0: jax.Array, eval_every: int = 1, degrade=None):
     w, tr = _scan_prox(prob, masks[0], jnp.asarray(step_size).reshape(()),
-                       w0[0], eval_every=eval_every)
+                       w0[0], eval_every=eval_every, degrade=degrade)
     return w[None], tr[None]
 
 
 def batched_scan_gd(prob: EncodedProblem, masks: jax.Array, step_size,
-                    w0: jax.Array, h: str = "l2", eval_every: int = 1):
+                    w0: jax.Array, h: str = "l2", eval_every: int = 1,
+                    degrade=None):
     """R realizations of encoded GD in one compiled program.
 
     masks: (R, T, m) stacked schedules; w0: (R, p) per-realization starts
@@ -311,18 +390,27 @@ def batched_scan_gd(prob: EncodedProblem, masks: jax.Array, step_size,
     lone realization only adds overhead (BENCH_trials.json showed 0.79x),
     and the result is identical by construction.
     """
+    degrade = _degrade_tuple(degrade)
     if masks.shape[0] == 1:
         return _traced_call(_runner_name("runner:gd"), _scan_gd_r1, prob,
                             masks, step_size, w0, h=h,
-                            eval_every=eval_every)
+                            eval_every=eval_every, degrade=degrade)
     return _traced_call(_runner_name("runner:batched_gd"), _batched_scan_gd,
                         prob, masks, step_size, w0, h=h,
-                        eval_every=eval_every)
+                        eval_every=eval_every, degrade=degrade)
 
 
 def _batched_prox(prob: EncodedProblem, masks: jax.Array, step_size,
-                  w0: jax.Array, eval_every: int = 1):
+                  w0: jax.Array, eval_every: int = 1, degrade=None):
     def one(masks_r, w0_r, step_r):
+        if degrade is not None:
+            _, k_min, shrink = degrade
+            (wT, _), trace = _strided_scan(
+                lambda c, mask: _hold_prox_step(prob, c, mask, step_r,
+                                                k_min, shrink),
+                lambda c: original_objective(prob, c[0], h="l1"),
+                (w0_r, jnp.zeros_like(w0_r)), masks_r, eval_every)
+            return wT, trace
         return _strided_scan(
             lambda w, mask: _prox_step(prob, w, mask, step_r),
             lambda w: original_objective(prob, w, h="l1"),
@@ -331,24 +419,26 @@ def _batched_prox(prob: EncodedProblem, masks: jax.Array, step_size,
     return jax.vmap(one)(masks, w0, _step_vector(step_size, masks.shape[0]))
 
 
-@partial(jax.jit, static_argnames=("eval_every",), donate_argnums=(3,))
+@partial(jax.jit, static_argnames=("eval_every", "degrade"),
+         donate_argnums=(3,))
 def _batched_scan_prox(prob: EncodedProblem, masks: jax.Array, step_size,
-                       w0: jax.Array, eval_every: int = 1):
-    return _batched_prox(prob, masks, step_size, w0, eval_every)
+                       w0: jax.Array, eval_every: int = 1, degrade=None):
+    return _batched_prox(prob, masks, step_size, w0, eval_every, degrade)
 
 
 def batched_scan_prox(prob: EncodedProblem, masks: jax.Array, step_size,
-                      w0: jax.Array, eval_every: int = 1):
+                      w0: jax.Array, eval_every: int = 1, degrade=None):
     """R realizations of encoded ISTA in one compiled program (see
     ``batched_scan_gd`` for the axis/donation/eval_every/R==1
     conventions)."""
+    degrade = _degrade_tuple(degrade)
     if masks.shape[0] == 1:
         return _traced_call(_runner_name("runner:prox"), _scan_prox_r1,
                             prob, masks, step_size, w0,
-                            eval_every=eval_every)
+                            eval_every=eval_every, degrade=degrade)
     return _traced_call(_runner_name("runner:batched_prox"),
                         _batched_scan_prox, prob, masks, step_size, w0,
-                        eval_every=eval_every)
+                        eval_every=eval_every, degrade=degrade)
 
 
 @lru_cache(maxsize=8)
@@ -453,7 +543,7 @@ def trials_device_count(trials: int) -> int:
 
 @lru_cache(maxsize=16)
 def _sharded_fn(kind: str, ndev: int, h: str, eval_every: int,
-                buffer_size: int):
+                buffer_size: int, degrade=None):
     """One compiled shard_map executable per (runner kind, mesh size,
     static config).  Each mesh shard runs the plain vmapped body over its
     R/ndev local realizations — realizations are independent, so there are
@@ -462,10 +552,12 @@ def _sharded_fn(kind: str, ndev: int, h: str, eval_every: int,
     mesh = Mesh(np.asarray(jax.devices()[:ndev]), ("trials",))
     P, Pt = PartitionSpec(), PartitionSpec("trials")
     if kind == "gd":
-        impl = partial(_batched_gd, h=h, eval_every=eval_every)
+        impl = partial(_batched_gd, h=h, eval_every=eval_every,
+                       degrade=degrade)
         in_specs = (P, Pt, P, Pt)
     elif kind == "prox":
-        impl = partial(_batched_prox, eval_every=eval_every)
+        impl = partial(_batched_prox, eval_every=eval_every,
+                       degrade=degrade)
         in_specs = (P, Pt, P, Pt)
     elif kind == "async":
         impl = partial(_batched_async, buffer_size=buffer_size, h=h,
@@ -478,32 +570,35 @@ def _sharded_fn(kind: str, ndev: int, h: str, eval_every: int,
 
 
 def sharded_scan_gd(prob: EncodedProblem, masks: jax.Array, step_size,
-                    w0: jax.Array, h: str = "l2", eval_every: int = 1):
+                    w0: jax.Array, h: str = "l2", eval_every: int = 1,
+                    degrade=None):
     """``batched_scan_gd`` with the realization axis sharded across the
     local device mesh.  Returns (w, trace, ndev); ndev == 1 means the vmap
     fallback ran (single device, or R not divisible by the device count).
     """
+    degrade = _degrade_tuple(degrade)
     ndev = trials_device_count(masks.shape[0])
     if ndev == 1:
         w, tr = batched_scan_gd(prob, masks, step_size, w0, h=h,
-                                eval_every=eval_every)
+                                eval_every=eval_every, degrade=degrade)
         return w, tr, 1
-    fn = _sharded_fn("gd", ndev, h, eval_every, 0)
+    fn = _sharded_fn("gd", ndev, h, eval_every, 0, degrade)
     w, tr = _traced_call("runner:sharded_gd", fn, prob, masks,
                          jnp.asarray(step_size, jnp.float32), w0)
     return w, tr, ndev
 
 
 def sharded_scan_prox(prob: EncodedProblem, masks: jax.Array, step_size,
-                      w0: jax.Array, eval_every: int = 1):
+                      w0: jax.Array, eval_every: int = 1, degrade=None):
     """``batched_scan_prox`` sharded over the trials mesh axis (see
     ``sharded_scan_gd``)."""
+    degrade = _degrade_tuple(degrade)
     ndev = trials_device_count(masks.shape[0])
     if ndev == 1:
         w, tr = batched_scan_prox(prob, masks, step_size, w0,
-                                  eval_every=eval_every)
+                                  eval_every=eval_every, degrade=degrade)
         return w, tr, 1
-    fn = _sharded_fn("prox", ndev, "l1", eval_every, 0)
+    fn = _sharded_fn("prox", ndev, "l1", eval_every, 0, degrade)
     w, tr = _traced_call("runner:sharded_prox", fn, prob, masks,
                          jnp.asarray(step_size, jnp.float32), w0)
     return w, tr, ndev

@@ -25,7 +25,9 @@ from repro.core.lbfgs import run_encoded_lbfgs
 from repro.core.model_parallel import make_lifted_problem, phi_quadratic
 from repro.obs.trace import span as _obs_span
 
-from .engine import ActiveSetPolicy, AsyncTrace, ClusterEngine, FastestK
+from .engine import (ActiveSetPolicy, AsyncTrace, ClusterEngine, FastestK,
+                     _policy_k_min)
+from .faults import make_degrade
 from .runners import (batched_scan_async, batched_scan_bcd, batched_scan_gd,
                       batched_scan_prox, scan_async, scan_bcd, scan_gd,
                       scan_prox, sharded_scan_async, sharded_scan_gd,
@@ -326,6 +328,30 @@ def resolve_eval_every(steps: int, eval_every: int) -> int:
 # Synchronous data-parallel family (encoded / uncoded / replication)
 # ---------------------------------------------------------------------------
 
+def _resolve_degrade(policy: ActiveSetPolicy, cfg: dict):
+    """Pop + parse the ``degrade`` config key; an unset ``k_min`` is bound
+    to the policy's decode threshold (``repro.runtime.faults``)."""
+    deg = make_degrade(cfg.pop("degrade", None))
+    if deg is not None and deg.k_min is None:
+        deg = dataclasses.replace(deg, k_min=_policy_k_min(policy))
+    return deg
+
+
+def _fault_meta(engine: ClusterEngine, policy, degrade, masks) -> dict:
+    """Fault-lane record fields: injected fault spec, degrade mode, and the
+    realized sub-k iteration fraction (empty when faults are off)."""
+    meta: dict = {}
+    if degrade is not None:
+        meta["degrade"] = degrade.mode
+    if getattr(engine, "faults", None) is not None:
+        meta["faults"] = engine.faults.spec
+        k_floor = (degrade.k_min if degrade is not None
+                   and degrade.k_min is not None else _policy_k_min(policy))
+        meta["subk_fraction"] = float(
+            (np.asarray(masks).sum(-1) < k_floor).mean())
+    return meta
+
+
 class _SyncGradientStrategy(Strategy):
     """Common machinery: encode rows, realize a schedule, run the fused scan."""
 
@@ -352,21 +378,24 @@ class _SyncGradientStrategy(Strategy):
 
     def run(self, spec, engine, *, steps=200, **cfg):
         policy = self._policy(engine, cfg)
+        degrade = _resolve_degrade(policy, cfg)
         enc, prob = self._problem(spec, engine, cfg)
         step_size = cfg.pop("step_size", None) or _auto_step(spec)
         w0 = jnp.asarray(cfg.pop("w0", np.zeros(spec.p)), jnp.float32)
-        sched = engine.sample_schedule(steps, policy)
+        sched = engine.sample_schedule(steps, policy, degrade=degrade)
         masks = jnp.asarray(sched.masks)
         if spec.h == "l1":
-            w, tr = scan_prox(prob, masks, step_size, w0)
+            w, tr = scan_prox(prob, masks, step_size, w0, degrade=degrade)
         else:
-            w, tr = scan_gd(prob, masks, step_size, w0, h=spec.h)
+            w, tr = scan_gd(prob, masks, step_size, w0, h=spec.h,
+                            degrade=degrade)
         return RunResult(
             strategy=self.name, times=sched.times, objective=np.asarray(tr),
             w=np.asarray(w),
             meta={"encoder": enc.name, "beta": enc.beta,
                   "policy": type(policy).__name__, "step_size": step_size,
-                  "mean_active": float(sched.masks.sum(1).mean())},
+                  "mean_active": float(sched.masks.sum(1).mean()),
+                  **_fault_meta(engine, policy, degrade, sched.masks)},
             schedule=sched)
 
     def run_batched(self, spec, engine, *, steps=200, trials=1, eval_every=1,
@@ -383,32 +412,38 @@ class _SyncGradientStrategy(Strategy):
         check_trials(steps, trials, eval_every)
         stride_every = resolve_eval_every(steps, eval_every)
         policy = self._policy(engine, cfg)
+        degrade = _resolve_degrade(policy, cfg)
         enc, prob = self._problem(spec, engine, cfg)
         step_size = cfg.pop("step_size", None) or _auto_step(spec)
         w0 = jnp.asarray(cfg.pop("w0", np.zeros(spec.p)), jnp.float32)
         w0 = jnp.tile(w0[None], (trials, 1))       # donated by the runner
-        batch = engine.sample_schedules(steps, policy, trials)
+        batch = engine.sample_schedules(steps, policy, trials,
+                                        degrade=degrade)
         masks = jnp.asarray(batch.masks)
         meta = {"encoder": enc.name, "beta": enc.beta,
                 "policy": type(policy).__name__, "step_size": step_size,
                 "trials": trials, "eval_every": eval_every,
                 "batched": True,
-                "mean_active": float(batch.masks.sum(-1).mean())}
+                "mean_active": float(batch.masks.sum(-1).mean()),
+                **_fault_meta(engine, policy, degrade, batch.masks)}
         if placement == "sharded":
             if spec.h == "l1":
                 w, tr, ndev = sharded_scan_prox(prob, masks, step_size, w0,
-                                                eval_every=stride_every)
+                                                eval_every=stride_every,
+                                                degrade=degrade)
             else:
                 w, tr, ndev = sharded_scan_gd(prob, masks, step_size, w0,
                                               h=spec.h,
-                                              eval_every=stride_every)
+                                              eval_every=stride_every,
+                                              degrade=degrade)
             meta.update(placement="sharded", placement_devices=ndev)
         elif spec.h == "l1":
             w, tr = batched_scan_prox(prob, masks, step_size, w0,
-                                      eval_every=stride_every)
+                                      eval_every=stride_every,
+                                      degrade=degrade)
         else:
             w, tr = batched_scan_gd(prob, masks, step_size, w0, h=spec.h,
-                                    eval_every=stride_every)
+                                    eval_every=stride_every, degrade=degrade)
         return TrialsResult(
             strategy=self.name,
             times=batch.times[:, stride_every - 1::stride_every],
@@ -440,6 +475,15 @@ class _SyncGradientStrategy(Strategy):
         if len(ms) > 1:
             raise ValueError(f"cell batch mixes worker counts {sorted(ms)}")
         policies = [self._policy(e, cfg) for e, cfg in zip(engines, cfgs)]
+        degrades = [_resolve_degrade(pol, cfg)
+                    for pol, cfg in zip(policies, cfgs)]
+        # the runner's degrade config is static for the whole stacked
+        # program, so a batch must be degrade-homogeneous (the executor's
+        # compat key groups on the degrade spec — this is a backstop)
+        if len({d for d in degrades}) > 1:
+            raise ValueError("cell batch mixes degrade policies "
+                             f"{sorted({str(d) for d in degrades})}")
+        degrade = degrades[0]
         enc, prob = self._problem(spec, engines[0], cfgs[0])
         for cfg in cfgs[1:]:     # the shared encode consumed cfgs[0]'s keys
             for key in ("encoder", "beta", "encoder_seed"):
@@ -448,17 +492,18 @@ class _SyncGradientStrategy(Strategy):
                       for cfg in cfgs]
         w0s = [jnp.asarray(cfg.pop("w0", np.zeros(spec.p)), jnp.float32)
                for cfg in cfgs]
-        batches = [e.sample_schedules(steps, pol, trials)
+        batches = [e.sample_schedules(steps, pol, trials, degrade=degrade)
                    for e, pol in zip(engines, policies)]
         masks = jnp.concatenate([jnp.asarray(b.masks) for b in batches])
         w0 = jnp.concatenate([jnp.tile(w[None], (trials, 1)) for w in w0s])
         step_vec = jnp.repeat(jnp.asarray(step_sizes, jnp.float32), trials)
         if spec.h == "l1":
             w, tr = batched_scan_prox(prob, masks, step_vec, w0,
-                                      eval_every=stride_every)
+                                      eval_every=stride_every,
+                                      degrade=degrade)
         else:
             w, tr = batched_scan_gd(prob, masks, step_vec, w0, h=spec.h,
-                                    eval_every=stride_every)
+                                    eval_every=stride_every, degrade=degrade)
         w, tr = np.asarray(w), np.asarray(tr)
         results = []
         for ci in range(C):
@@ -473,7 +518,9 @@ class _SyncGradientStrategy(Strategy):
                       "step_size": step_sizes[ci], "trials": trials,
                       "eval_every": eval_every, "batched": True,
                       "cell_batched": C,
-                      "mean_active": float(batch.masks.sum(-1).mean())},
+                      "mean_active": float(batch.masks.sum(-1).mean()),
+                      **_fault_meta(engines[ci], policies[ci], degrade,
+                                    batch.masks)},
                 schedules=batch))
         return results
 
@@ -531,12 +578,17 @@ class CodedLBFGS(_SyncGradientStrategy):
         if spec.h != "l2":
             raise ValueError("coded-lbfgs requires the ridge objective")
         policy = self._policy(engine, cfg)
+        degrade = _resolve_degrade(policy, cfg)
+        if degrade is not None and degrade.mode == "hold":
+            raise ValueError("coded-lbfgs supports renormalize/backoff "
+                             "degrade only (the two-loop memory is host "
+                             "state; see DESIGN.md §14)")
         enc, prob = self._problem(spec, engine, cfg)
         memory = cfg.pop("memory", 10)
         w0 = cfg.pop("w0", None)
         if w0 is not None:
             w0 = jnp.asarray(w0, jnp.float32)
-        sched = engine.sample_schedule(steps, policy)
+        sched = engine.sample_schedule(steps, policy, degrade=degrade)
         with _obs_span("runner:lbfgs", steps=steps):
             w, tr = run_encoded_lbfgs(prob, sched.masks, memory=memory,
                                       w0=w0)
@@ -544,7 +596,8 @@ class CodedLBFGS(_SyncGradientStrategy):
             strategy=self.name, times=sched.times, objective=np.asarray(tr),
             w=np.asarray(w),
             meta={"encoder": enc.name, "beta": enc.beta, "memory": memory,
-                  "policy": type(policy).__name__},
+                  "policy": type(policy).__name__,
+                  **_fault_meta(engine, policy, degrade, sched.masks)},
             schedule=sched)
 
     def run_batched(self, spec, engine, *, steps=200, trials=1, eval_every=1,
@@ -558,12 +611,18 @@ class CodedLBFGS(_SyncGradientStrategy):
         check_trials(steps, trials, eval_every)
         stride_every = resolve_eval_every(steps, eval_every)
         policy = self._policy(engine, cfg)
+        degrade = _resolve_degrade(policy, cfg)
+        if degrade is not None and degrade.mode == "hold":
+            raise ValueError("coded-lbfgs supports renormalize/backoff "
+                             "degrade only (the two-loop memory is host "
+                             "state; see DESIGN.md §14)")
         enc, prob = self._problem(spec, engine, cfg)
         memory = cfg.pop("memory", 10)
         w0 = cfg.pop("w0", None)
         if w0 is not None:
             w0 = jnp.asarray(w0, jnp.float32)
-        batch = engine.sample_schedules(steps, policy, trials)
+        batch = engine.sample_schedules(steps, policy, trials,
+                                        degrade=degrade)
         ws, trs = [], []
         for r in range(trials):
             with _obs_span("runner:lbfgs", steps=steps, realization=r):
@@ -577,7 +636,8 @@ class CodedLBFGS(_SyncGradientStrategy):
             objective=np.stack(trs)[:, stride], w=np.stack(ws),
             meta={"encoder": enc.name, "beta": enc.beta, "memory": memory,
                   "policy": type(policy).__name__, "trials": trials,
-                  "eval_every": eval_every, "batched": False},
+                  "eval_every": eval_every, "batched": False,
+                  **_fault_meta(engine, policy, degrade, batch.masks)},
             schedules=batch)
 
 
@@ -592,6 +652,11 @@ class CodedBCD(_SyncGradientStrategy):
 
     def run(self, spec, engine, *, steps=200, **cfg):
         policy = self._policy(engine, cfg)
+        degrade = _resolve_degrade(policy, cfg)
+        if degrade is not None and degrade.mode == "hold":
+            raise ValueError("coded-bcd supports renormalize/backoff degrade "
+                             "only (an erased block simply holds its "
+                             "coordinates; see DESIGN.md §14)")
         with _obs_span("encode", strategy=self.name, p=spec.p, m=engine.m):
             enc = _resolve_encoder(cfg.pop("encoder", "hadamard"), spec.p,
                                    beta=cfg.pop("beta", 2.0),
@@ -603,7 +668,7 @@ class CodedBCD(_SyncGradientStrategy):
         step_size = cfg.pop("step_size", None) or \
             0.9 / (spec.lipschitz() * float(enc.beta))
         v0 = jnp.zeros((engine.m, prob.XS.shape[-1]), jnp.float32)
-        sched = engine.sample_schedule(steps, policy)
+        sched = engine.sample_schedule(steps, policy, degrade=degrade)
         v, tr = scan_bcd(prob, jnp.asarray(sched.masks), step_size, v0)
         # align: tr[t+1] is the objective AFTER commit t (length T+1)
         return RunResult(
@@ -611,7 +676,8 @@ class CodedBCD(_SyncGradientStrategy):
             objective=np.asarray(tr)[1:], w=np.asarray(v),
             meta={"encoder": enc.name, "beta": enc.beta,
                   "objective": "phi(Xw) (unregularized, exact-optimum family)",
-                  "step_size": step_size},
+                  "step_size": step_size,
+                  **_fault_meta(engine, policy, degrade, sched.masks)},
             schedule=sched)
 
     def run_batched(self, spec, engine, *, steps=200, trials=1, eval_every=1,
@@ -623,6 +689,11 @@ class CodedBCD(_SyncGradientStrategy):
         check_trials(steps, trials, eval_every)
         stride_every = resolve_eval_every(steps, eval_every)
         policy = self._policy(engine, cfg)
+        degrade = _resolve_degrade(policy, cfg)
+        if degrade is not None and degrade.mode == "hold":
+            raise ValueError("coded-bcd supports renormalize/backoff degrade "
+                             "only (an erased block simply holds its "
+                             "coordinates; see DESIGN.md §14)")
         with _obs_span("encode", strategy=self.name, p=spec.p, m=engine.m):
             enc = _resolve_encoder(cfg.pop("encoder", "hadamard"), spec.p,
                                    beta=cfg.pop("beta", 2.0),
@@ -632,14 +703,16 @@ class CodedBCD(_SyncGradientStrategy):
             prob = make_lifted_problem(spec.X, enc, engine.m, val, grad)
         step_size = cfg.pop("step_size", None) or \
             0.9 / (spec.lipschitz() * float(enc.beta))
-        batch = engine.sample_schedules(steps, policy, trials)
+        batch = engine.sample_schedules(steps, policy, trials,
+                                        degrade=degrade)
         v0 = jnp.zeros((trials, engine.m, prob.XS.shape[-1]), jnp.float32)
         v, tr = batched_scan_bcd(prob, jnp.asarray(batch.masks), step_size,
                                  v0, eval_every=stride_every)
         meta = {"encoder": enc.name, "beta": enc.beta,
                 "objective": "phi(Xw) (unregularized, exact-optimum family)",
                 "step_size": step_size, "trials": trials,
-                "eval_every": eval_every, "batched": True}
+                "eval_every": eval_every, "batched": True,
+                **_fault_meta(engine, policy, degrade, batch.masks)}
         if placement == "sharded":
             # the lifted problem carries host phi callables, which shard_map
             # cannot partition — realizations stay vmapped on one device
@@ -673,6 +746,10 @@ class AsyncSGD(Strategy):
         if spec.h == "l1":
             raise ValueError("async baseline covers smooth objectives only")
         m = engine.m
+        # per-arrival accounting has no barrier to degrade: crashed workers
+        # simply stop contributing and corrupt arrivals are discarded by
+        # the engine, so any requested degrade mode is a no-op here
+        cfg.pop("degrade", None)
         bound = int(cfg.pop("staleness_bound", 2 * m))
         updates = int(cfg.pop("updates", steps * m))
         step_size = (cfg.pop("step_size", None) or _auto_step(spec)) / m
@@ -684,14 +761,18 @@ class AsyncSGD(Strategy):
         w, tr = scan_async(prob, jnp.asarray(trace.workers),
                            jnp.asarray(trace.staleness), step_size, w0,
                            buffer_size=bound + 1, h=spec.h)
+        meta = {"staleness_bound": bound, "updates": updates,
+                "dropped": trace.dropped,
+                "mean_staleness": float(trace.staleness.mean()),
+                "max_staleness": int(trace.staleness.max()),
+                "step_size": step_size}
+        if engine.faults is not None:
+            meta["faults"] = engine.faults.spec
+            meta["corrupted"] = int(trace.corrupted)
         return RunResult(
             strategy=self.name, times=trace.times, objective=np.asarray(tr),
             w=np.asarray(w),
-            meta={"staleness_bound": bound, "updates": updates,
-                  "dropped": trace.dropped,
-                  "mean_staleness": float(trace.staleness.mean()),
-                  "max_staleness": int(trace.staleness.max()),
-                  "step_size": step_size},
+            meta=meta,
             schedule=trace)
 
     def run_batched(self, spec, engine, *, steps=200, trials=1, eval_every=1,
@@ -699,6 +780,7 @@ class AsyncSGD(Strategy):
         if spec.h == "l1":
             raise ValueError("async baseline covers smooth objectives only")
         m = engine.m
+        cfg.pop("degrade", None)   # no barrier to degrade (see run())
         bound = int(cfg.pop("staleness_bound", 2 * m))
         updates = int(cfg.pop("updates", steps * m))
         check_trials(updates, trials, eval_every)
@@ -731,6 +813,10 @@ class AsyncSGD(Strategy):
                 "max_staleness": int(batch.staleness.max()),
                 "step_size": step_size, "trials": trials,
                 "eval_every": eval_every, "batched": True}
+        if engine.faults is not None:
+            meta["faults"] = engine.faults.spec
+            if batch.corrupted is not None:
+                meta["corrupted"] = [int(c) for c in batch.corrupted]
         if placement == "sharded":
             w, tr, ndev = sharded_scan_async(
                 prob, jnp.asarray(batch.workers),

@@ -162,7 +162,8 @@ def sub_engine(engine: ClusterEngine, tag: int) -> ClusterEngine:
     return ClusterEngine(engine.delay_model, engine.m,
                          compute_time=engine.compute_time,
                          master_overhead=engine.master_overhead,
-                         seed=engine.seed + 7919 * (tag + 1))
+                         seed=engine.seed + 7919 * (tag + 1),
+                         faults=engine.faults)
 
 
 def chunk_sizes(steps: int, records: int) -> list[int]:

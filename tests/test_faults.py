@@ -1,0 +1,471 @@
+"""Fault-injection subsystem (DESIGN.md §14): spec parsing, engine fault
+paths, policy floors, empty-active-set safety, degradation modes, fault
+metrics, and the resilient executor (retry / streamed cells / resume)."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (bimodal_delays, constant_delays, hadamard_encoder,
+                        make_encoded_problem, pad_rows)
+from repro.core.data_parallel import masked_gradient
+from repro.core.gradient_coding import (coded_weights, decode_exact_possible,
+                                        make_frc)
+from repro.core.straggler import fastest_k
+from repro.experiments import (DelayAxis, ExperimentSpec, ProblemAxis,
+                               StrategyAxis, TrialsAxis, execute, plan)
+from repro.obs import fault_metrics, schedule_metrics
+from repro.obs.runstore import (RunStore, completed_cells, prune, record_cell)
+from repro.runtime import (AdaptiveK, AdversarialRotation, ClusterEngine,
+                           Deadline, FastestK, ProblemSpec, get_strategy)
+from repro.runtime.faults import (FAULT_BLACKOUT, FAULT_CORRUPT,
+                                  FAULT_CRASHED, FAULT_OK, BlackoutFault,
+                                  CrashFault, DegradePolicy, FaultModel,
+                                  make_degrade, make_fault_model)
+
+M, K = 8, 5
+
+
+def _engine(faults=None, *, m=M, seed=0, delay=None):
+    return ClusterEngine(delay or bimodal_delays(), m, seed=seed,
+                         faults=faults)
+
+
+# ---------------------------------------------------------------------------
+# spec parsing
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_parsing_roundtrip():
+    fm = make_fault_model("crash:p=0.2,at=0.5;corrupt:p=0.05")
+    assert isinstance(fm, FaultModel) and len(fm.injectors) == 2
+    assert fm.spec == "crash:p=0.2,at=0.5;corrupt:p=0.05"
+    assert make_fault_model(fm) is fm               # passthrough
+    assert make_fault_model(None) is None
+    assert make_fault_model("") is None
+    assert make_fault_model("none") is None
+
+
+def test_fault_spec_zone_workers_and_errors():
+    fm = make_fault_model("zone:workers=0-2+5,at=0.8,dur=1.5")
+    (zone,) = fm.injectors
+    assert zone.workers == (0, 1, 2, 5) and zone.dur == 1.5
+    with pytest.raises(KeyError, match="unknown fault injector"):
+        make_fault_model("meteor:p=1")
+    with pytest.raises(ValueError, match="dur must be < period"):
+        make_fault_model("blackout:p=1,at=0,dur=2,period=1")
+
+
+def test_degrade_spec_parsing():
+    assert make_degrade(None) is None
+    assert make_degrade("renormalize") is None      # default math, no object
+    pol = make_degrade("hold:shrink=0.25,k_min=4")
+    assert pol.mode == "hold" and pol.shrink == 0.25 and pol.k_min == 4
+    back = make_degrade("backoff:base=0.1,retries=3")
+    assert back.mode == "backoff" and back.base == 0.1 and back.retries == 3
+    assert make_degrade(pol) is pol
+    with pytest.raises(KeyError, match="unknown degrade mode"):
+        make_degrade("panic")
+
+
+# ---------------------------------------------------------------------------
+# fault realization
+# ---------------------------------------------------------------------------
+
+def test_realization_deterministic_and_delay_stream_untouched():
+    fm = make_fault_model("crash:p=0.5,at=0.3;corrupt:p=0.1")
+    a = fm.realize(M, trial_seed=7)
+    b = fm.realize(M, trial_seed=7)
+    np.testing.assert_array_equal(a.crash_time, b.crash_time)
+    # a certainly-zero fault model must reproduce the no-fault schedule
+    # bit for bit: fault draws live on a tagged child stream
+    clean = _engine().sample_schedule(20, FastestK(K))
+    nofault = _engine("crash:p=0,at=0.5").sample_schedule(20, FastestK(K))
+    np.testing.assert_array_equal(nofault.masks, clean.masks)
+    np.testing.assert_array_equal(nofault.times, clean.times)
+    assert nofault.failed is not None and not nofault.failed.any()
+
+
+def test_blackout_windows_and_recovery():
+    fm = FaultModel((BlackoutFault(p=1.0, at=1.0, dur=0.5),))
+    rz = fm.realize(4, trial_seed=0)
+    assert not rz.blackout_at(0.9).any()
+    assert rz.blackout_at(1.2).all()
+    assert not rz.blackout_at(1.6).any()
+    np.testing.assert_allclose(rz.recovery_time(1.2), 1.5)
+    np.testing.assert_allclose(rz.recovery_time(0.5), 0.5)  # not dark now
+
+
+def test_recurring_blackout_period():
+    fm = make_fault_model("blackout:p=1,at=1,dur=0.5,period=2")
+    rz = fm.realize(2, trial_seed=0)
+    assert rz.blackout_at(1.2).all() and rz.blackout_at(3.2).all()
+    assert not rz.blackout_at(2.2).any()
+
+
+# ---------------------------------------------------------------------------
+# engine fault paths (sync)
+# ---------------------------------------------------------------------------
+
+def test_faulted_schedule_invariants():
+    eng = _engine("crash:p=0.3,at=0.4;blackout:p=0.3,at=0.2,dur=0.3;"
+                  "corrupt:p=0.1")
+    sched = eng.sample_schedule(30, FastestK(K))
+    assert sched.failed.shape == sched.masks.shape
+    assert set(np.unique(sched.failed)) <= {FAULT_OK, FAULT_CRASHED,
+                                            FAULT_BLACKOUT, FAULT_CORRUPT}
+    # an active (mask==1) worker is never a failed one
+    assert not (sched.masks.astype(bool) & (sched.failed != FAULT_OK)).any()
+    # times strictly increase and stay finite even with dead workers
+    assert np.isfinite(sched.times).all()
+    assert (np.diff(sched.times) > 0).all()
+    # crashes are permanent: once CRASHED, CRASHED at every later step
+    for w in range(M):
+        hits = np.nonzero(sched.failed[:, w] == FAULT_CRASHED)[0]
+        if hits.size:
+            assert (sched.failed[hits[0]:, w] == FAULT_CRASHED).all()
+    assert sched.fault_events                # realized faults are reported
+
+
+def test_zone_kill_all_commits_empty_rounds():
+    eng = _engine(f"zone:workers=0-{M - 1},at=0.2", delay=constant_delays(0.1))
+    sched = eng.sample_schedule(10, FastestK(K))
+    dead = sched.times > 0.2
+    assert dead.any()
+    # all-failed rounds: mask row is all zero, master idles one compute
+    # window (heartbeat assumption) and the clock still advances
+    t0 = int(np.nonzero(dead)[0][0]) + 1
+    assert not sched.masks[t0:].any()
+    np.testing.assert_allclose(
+        np.diff(sched.times[t0:]),
+        eng.compute_time + eng.master_overhead)
+
+
+def test_deadline_policy_never_waits_on_dead_workers():
+    eng = _engine("crash:p=0.6,at=0.1", delay=constant_delays(0.05))
+    sched = eng.sample_schedule(20, Deadline(deadline=0.5, k_min=2))
+    assert np.isfinite(sched.times).all()
+    # survivors only in the active sets after the crash point
+    crashed = sched.failed[-1] == FAULT_CRASHED
+    assert not sched.masks[-1, crashed].any()
+
+
+def test_corruption_charges_barrier_but_masks_out():
+    # deterministic delays: the corrupt-only barrier equals the clean one
+    eng = _engine("corrupt:p=0.3", delay=constant_delays(0.1))
+    clean = _engine(delay=constant_delays(0.1)).sample_schedule(
+        25, FastestK(K))
+    sched = eng.sample_schedule(25, FastestK(K))
+    np.testing.assert_allclose(sched.times, clean.times)
+    corrupt = sched.failed == FAULT_CORRUPT
+    assert corrupt.any()
+    assert not sched.masks[corrupt].any()
+    # some rounds therefore combine fewer than k gradients
+    assert sched.masks.sum(axis=1).min() < K
+
+
+def test_backoff_recovers_blacked_out_workers():
+    # all workers dark over [0.1, 0.4): without backoff the rounds inside
+    # the window are empty; with it the master extends its deadline and
+    # the blacked-out workers rejoin
+    spec = f"zone:workers=0-{M - 1},at=0.1,dur=0.3"
+    plain = _engine(spec, delay=constant_delays(0.02)).sample_schedule(
+        8, FastestK(K))
+    back = _engine(spec, delay=constant_delays(0.02)).sample_schedule(
+        8, FastestK(K),
+        degrade=DegradePolicy(mode="backoff", base=0.2, retries=4))
+    assert plain.masks.sum() < back.masks.sum()
+    assert (back.masks.sum(axis=1) >= 1).all()
+
+
+def test_batch_failed_stacks_and_matches_trials():
+    eng = _engine("crash:p=0.3,at=0.3;corrupt:p=0.05")
+    batch = eng.sample_schedules(12, FastestK(K), trials=3)
+    assert batch.failed.shape == (3, 12, M)
+    for r in range(3):
+        solo = eng.trial(r).sample_schedule(12, FastestK(K))
+        np.testing.assert_array_equal(batch.failed[r], solo.failed)
+        np.testing.assert_array_equal(batch.masks[r], solo.masks)
+        np.testing.assert_allclose(batch.times[r], solo.times)
+
+
+# ---------------------------------------------------------------------------
+# engine fault paths (async)
+# ---------------------------------------------------------------------------
+
+def test_async_crash_and_corruption_accounting():
+    eng = _engine("crash:p=0.4,at=1.0;corrupt:p=0.1")
+    tr = eng.sample_async(60, staleness_bound=8)
+    assert tr.updates == 60
+    assert tr.corrupted > 0
+    assert tr.fault_events
+    # crashed workers stop contributing after their crash time
+    fr = eng.faults.realize(M, eng.seed)
+    for w in np.nonzero(np.isfinite(fr.crash_time))[0]:
+        late = tr.times[tr.workers == w]
+        assert (late <= fr.crash_time[w] + 10.0).all()
+
+
+def test_async_all_crashed_raises():
+    eng = _engine(f"zone:workers=0-{M - 1},at=0.5",
+                  delay=constant_delays(0.05))
+    with pytest.raises(ValueError, match="async cluster died"):
+        eng.sample_async(500, staleness_bound=4)
+
+
+# ---------------------------------------------------------------------------
+# policy floors + empty-active-set safety (satellite: hardening)
+# ---------------------------------------------------------------------------
+
+def test_policy_k_floors():
+    with pytest.raises(ValueError, match="k >= 1"):
+        FastestK(0)
+    with pytest.raises(ValueError, match="k >= 1"):
+        AdversarialRotation(-1)
+    assert AdaptiveK(beta=2.0, k_min=0).k_min == 1
+    assert Deadline(deadline=0.5, k_min=-3).k_min == 1
+
+
+def test_fastest_k_clamps_bounds():
+    d = np.asarray([3.0, 1.0, 2.0])
+    assert fastest_k(d, 0).size == 0
+    assert fastest_k(d, -2).size == 0
+    np.testing.assert_array_equal(np.sort(fastest_k(d, 5)), [0, 1, 2])
+    np.testing.assert_array_equal(np.sort(fastest_k(d, 2)), [1, 2])
+
+
+def test_empty_active_set_gradients_are_finite_zero():
+    spec = ProblemSpec.synthetic(64, 16, seed=0)
+    prob = make_encoded_problem(spec.X, spec.y,
+                                pad_rows(hadamard_encoder(64, 2.0), M), M,
+                                lam=spec.lam)
+    g = masked_gradient(prob, jnp.ones(16), jnp.zeros(M))
+    np.testing.assert_allclose(np.asarray(g), 0.0)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+def test_empty_active_set_fused_kernel_is_finite_zero():
+    from repro.kernels.fused_step import fused_masked_gradient
+    rng = np.random.default_rng(0)
+    SX = jnp.asarray(rng.normal(size=(M, 8, 16)), jnp.float32)
+    Sy = jnp.asarray(rng.normal(size=(M, 8)), jnp.float32)
+    g = fused_masked_gradient(SX, Sy, jnp.ones(16, jnp.float32),
+                              jnp.zeros(M, jnp.float32), n=64, beta=2.0)
+    np.testing.assert_allclose(np.asarray(g), 0.0)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+def test_empty_active_set_coded_weights_are_finite_zero():
+    code = make_frc(M, beta=2)
+    w = coded_weights(code, jnp.zeros(M))
+    np.testing.assert_allclose(np.asarray(w), 0.0)
+    assert not decode_exact_possible(code, np.zeros(M))
+
+
+# ---------------------------------------------------------------------------
+# degradation through the strategies
+# ---------------------------------------------------------------------------
+
+CHAOS = "crash:p=0.3,at=0.3;blackout:p=0.3,at=0.1,dur=0.4;corrupt:p=0.1"
+
+
+@pytest.mark.parametrize("degrade", [None, "hold:shrink=0.25",
+                                     "backoff:base=0.1,retries=3"])
+def test_coded_gd_survives_chaos_under_each_degrade(degrade):
+    spec = ProblemSpec.synthetic(128, 32, seed=0)
+    res = get_strategy("coded-gd").run(
+        spec, _engine(CHAOS), steps=25,
+        **({} if degrade is None else {"degrade": degrade}))
+    obj = np.asarray(res.objective)
+    assert np.isfinite(obj).all()
+    assert res.meta["faults"] == CHAOS
+    # the default renormalize math carries no policy object -> no meta key
+    assert res.meta.get("degrade") == (
+        None if degrade is None else degrade.split(":")[0])
+    assert 0.0 <= res.meta["subk_fraction"] <= 1.0
+
+
+def test_batched_matches_sequential_under_faults():
+    spec = ProblemSpec.synthetic(96, 24, seed=0)
+    strat = get_strategy("coded-gd")
+    eng = _engine(CHAOS)
+    batched = strat.run_batched(spec, eng, steps=10, trials=2,
+                                degrade="hold:shrink=0.5")
+    for r in range(2):
+        solo = strat.run(spec, eng.trial(r), steps=10,
+                         degrade="hold:shrink=0.5")
+        np.testing.assert_allclose(batched.realization(r).objective,
+                                   solo.objective, rtol=1e-5)
+
+
+def test_lbfgs_rejects_hold_degrade():
+    spec = ProblemSpec.synthetic(96, 24, seed=0)
+    with pytest.raises(ValueError, match="renormalize/backoff"):
+        get_strategy("coded-lbfgs").run(spec, _engine(CHAOS), steps=8,
+                                        degrade="hold")
+
+
+# ---------------------------------------------------------------------------
+# fault metrics
+# ---------------------------------------------------------------------------
+
+def test_fault_metrics_counts():
+    scheds = [_engine(CHAOS, seed=s).sample_schedule(20, FastestK(K))
+              for s in range(2)]
+    fm = fault_metrics(scheds, k=K)
+    assert fm["crashes"] >= 1 and fm["crashed_frac"] > 0
+    assert fm["corrupt_count"] >= 1
+    assert 0.0 <= fm["subk_fraction"] <= 1.0
+    assert "faults" in schedule_metrics(scheds, k=K)
+    # fault-free schedules contribute no fault block at all
+    clean = [_engine().sample_schedule(20, FastestK(K))]
+    assert fault_metrics(clean) == {}
+    assert "faults" not in schedule_metrics(clean, k=K)
+
+
+# ---------------------------------------------------------------------------
+# resilient executor: streamed cells, resume, retry
+# ---------------------------------------------------------------------------
+
+def _matrix_spec():
+    return ExperimentSpec(
+        problems=(ProblemAxis.synthetic(96, 24),),
+        strategies=(StrategyAxis("coded-gd", degrade="hold:shrink=0.5"),
+                    StrategyAxis("uncoded")),
+        delays=DelayAxis.of("bimodal", m=M,
+                            faults="crash:p=0.3,at=0.4;corrupt:p=0.05"),
+        trials=TrialsAxis(trials=2, eval_every=4), steps=12)
+
+
+def test_execute_streams_cells_and_resumes_identically(tmp_path):
+    store = RunStore(str(tmp_path / "runs"))
+    full = execute(plan(_matrix_spec()), record_to=store)
+    assert full.run_id is not None
+    cells = store.cells_dir(full.run_id)
+    assert sorted(os.listdir(cells)) == ["0000.json", "0001.json"]
+    manifest = json.loads(
+        open(os.path.join(store.root, full.run_id, "manifest.json")).read())
+    assert manifest["status"] == "complete"
+
+    # kill the matrix after cell 0: drop cell 1 and mark the run running
+    os.remove(os.path.join(cells, "0001.json"))
+    manifest["status"] = "running"
+    with open(os.path.join(store.root, full.run_id, "manifest.json"),
+              "w") as f:
+        json.dump(manifest, f)
+
+    resumed = execute(plan(_matrix_spec()), record_to=store,
+                      resume=full.run_id)
+    assert resumed.records == full.records     # bit-identical replay
+    assert resumed.run_id == full.run_id
+
+
+def test_resume_rejects_spec_mismatch(tmp_path):
+    store = RunStore(str(tmp_path / "runs"))
+    full = execute(plan(_matrix_spec()), record_to=store)
+    other = ExperimentSpec(
+        problems=(ProblemAxis.synthetic(64, 16),),
+        strategies=(StrategyAxis("uncoded"),),
+        delays=DelayAxis.of("bimodal", m=M), steps=8)
+    with pytest.raises(ValueError, match="spec hash mismatch"):
+        execute(plan(other), record_to=store, resume=full.run_id)
+    with pytest.raises(KeyError, match="is empty"):
+        execute(plan(other), record_to=RunStore(str(tmp_path / "empty")),
+                resume="latest")
+
+
+def test_retry_reruns_flaky_cell(tmp_path, monkeypatch, capsys):
+    import importlib
+    # the package re-exports the execute() function under the same name,
+    # so fetch the module object from sys.modules explicitly
+    ex = importlib.import_module("repro.experiments.execute")
+    real = ex._execute_cell
+    failures = {"left": 2}
+
+    def flaky(cell, caches):
+        if failures["left"] > 0:
+            failures["left"] -= 1
+            raise RuntimeError("transient device loss")
+        return real(cell, caches)
+
+    monkeypatch.setattr(ex, "_execute_cell", flaky)
+    monkeypatch.setattr(ex.time, "sleep", lambda s: None)
+    spec = ExperimentSpec(
+        problems=(ProblemAxis.synthetic(64, 16),),
+        strategies=(StrategyAxis("uncoded"),),
+        delays=DelayAxis.of("bimodal", m=M), steps=8)
+    result = execute(plan(spec), retries=3,
+                     record_to=RunStore(str(tmp_path / "runs")))
+    assert len(result.records) == 1 and failures["left"] == 0
+    assert "retry" in capsys.readouterr().out
+
+    # with retries exhausted the last error propagates (resume recovers)
+    failures["left"] = 99
+    with pytest.raises(RuntimeError, match="transient device loss"):
+        execute(plan(spec), retries=1)
+
+
+def test_retry_delay_capped_exponential_with_jitter():
+    from repro.experiments.execute import _retry_delay
+    d1, d2 = _retry_delay(0.5, 1, 0), _retry_delay(0.5, 2, 0)
+    assert d1 == _retry_delay(0.5, 1, 0)        # deterministic
+    assert 0.25 <= d1 <= 0.75 and 0.5 <= d2 <= 1.5
+    assert _retry_delay(0.5, 30, 0) <= 30.0     # cap
+
+
+# ---------------------------------------------------------------------------
+# run-store cell records + prune
+# ---------------------------------------------------------------------------
+
+def test_record_cell_roundtrip_skips_corrupt(tmp_path):
+    store = RunStore(str(tmp_path / "runs"))
+    run_id = "run-test"
+    record_cell(store, run_id, 0, {"strategy": "a", "final_metric": 1.0})
+    record_cell(store, run_id, 3, {"strategy": "b", "final_metric": 2.0})
+    with open(os.path.join(store.cells_dir(run_id), "0001.json"), "w") as f:
+        f.write("{ torn write")
+    done = completed_cells(store, run_id)
+    assert sorted(done) == [0, 3]               # corrupt file skipped
+    assert done[3]["strategy"] == "b"
+
+
+def test_prune_keep_and_repair(tmp_path, monkeypatch):
+    store = RunStore(str(tmp_path / "runs"))
+    ids = []
+    for s in range(3):
+        spec = ExperimentSpec(
+            problems=(ProblemAxis.synthetic(64, 16),),
+            strategies=(StrategyAxis("uncoded"),),
+            delays=DelayAxis.of("bimodal", m=M), steps=4,
+            trials=TrialsAxis(seed=s))
+        ids.append(execute(plan(spec), record_to=store).run_id)
+    assert all(ids)
+    out = prune(store, keep=1, dry_run=True)
+    assert sorted(out["kept"] + out["removed"]) == sorted(ids)
+    assert os.path.isdir(os.path.join(store.root, ids[0]))  # dry run
+    out = prune(store, keep=1)
+    # same-second stamps tie-break by run id; exactly one survivor either way
+    (survivor,) = out["kept"]
+    assert survivor in ids and len(out["removed"]) == 2
+    for rid in out["removed"]:
+        assert not os.path.isdir(os.path.join(store.root, rid))
+    # index now lists exactly the survivors
+    lines = [json.loads(l) for l in
+             open(os.path.join(store.root, "index.jsonl"))]
+    assert [l["run_id"] for l in lines] == [survivor]
+
+
+def test_prune_cli(tmp_path, capsys):
+    from repro.obs.runstore import main
+    store = RunStore(str(tmp_path / "runs"))
+    spec = ExperimentSpec(
+        problems=(ProblemAxis.synthetic(64, 16),),
+        strategies=(StrategyAxis("uncoded"),),
+        delays=DelayAxis.of("bimodal", m=M), steps=4)
+    execute(plan(spec), record_to=store)
+    assert main(["--store", store.root, "list"]) == 0
+    assert main(["--store", store.root, "prune", "--keep", "0"]) == 0
+    out = capsys.readouterr().out
+    assert "removed" in out
+    assert completed_cells(store, "anything") == {}
