@@ -16,10 +16,10 @@ import dataclasses
 
 import numpy as np
 
-from ..core.gradient_coding import FRCode, coded_weights
+from ..core.gradient_coding import FRCode, GradientCode, coded_weights
 
-__all__ = ["TokenStream", "CodedBatcher", "lsq_dataset", "lsq_rows",
-           "logreg_dataset", "logreg_rows", "mf_ratings_dataset",
+__all__ = ["TokenStream", "CodedBatcher", "GroupBatcher", "lsq_dataset",
+           "lsq_rows", "logreg_dataset", "logreg_rows", "mf_ratings_dataset",
            "stream_worker_blocks"]
 
 
@@ -81,6 +81,51 @@ class CodedBatcher:
         w = np.asarray(coded_weights(self.code, mask))    # (m,)
         weights = np.repeat(w, self.rows_per_worker).astype(np.float32)
         return toks[:, :-1], toks[:, 1:], weights
+
+
+@dataclasses.dataclass
+class GroupBatcher:
+    """Group-major batches for ANY :class:`GradientCode` (DESIGN §15).
+
+    Where :class:`CodedBatcher` bakes in the FRC replica layout and folds
+    decode weights into per-sample loss weights, ``GroupBatcher`` keeps the
+    two stages of the coded train step separate: it draws the
+    ``num_groups * rows`` data rows ONCE per step and lays them out
+    worker-major by the code's assignment —
+
+      tokens/labels: (m, slots * rows, seq)  where worker i's slots are its
+        ``worker_groups[i]`` (replicas/overlaps share bit-identical rows);
+      coeff: (m, slots * rows) float32 combine coefficients
+        (``worker_coeffs`` repeated over rows) — the B[i, j] each worker
+        applies LOCALLY before the decode-weighted combine.
+
+    Decode weights are NOT applied here: the trainer gets them from
+    ``code.decode_weights(mask)`` per step so the same batch serves any
+    erasure pattern.  Stochastic codes pass their per-step re-draw via the
+    ``code=`` override; the data draw count is identical either way, so
+    trajectories across codes with equal (num_groups, rows) consume the
+    same token stream.
+    """
+    stream: TokenStream
+    code: GradientCode
+    rows_per_worker: int
+    seq_len: int
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def next_batch(self, code: GradientCode | None = None):
+        code = self.code if code is None else code
+        b, rows = code.num_groups, self.rows_per_worker
+        data = self.stream.sample(self._rng, b * rows, self.seq_len)
+        data = data.reshape(b, rows, -1)
+        per_worker = data[code.worker_groups]      # (m, slots, rows, seq+1)
+        m = per_worker.shape[0]
+        per_worker = per_worker.reshape(m, -1, self.seq_len + 1)
+        coeff = np.repeat(np.asarray(code.worker_coeffs, np.float32),
+                          rows, axis=1)            # (m, slots * rows)
+        return (per_worker[..., :-1], per_worker[..., 1:], coeff)
 
 
 def lsq_dataset(n: int, p: int, *, noise: float = 0.1, sparse: int = 0,

@@ -142,8 +142,12 @@ class ExperimentResult:
 
 def cell_label(cell: PlannedCell) -> str:
     """The stable human-readable id obs events carry for one cell."""
-    prefix = (f"{cell.problem.workload}/"
-              if cell.kind == "workload" else "")
+    if cell.kind == "workload":
+        prefix = f"{cell.problem.workload}/"
+    elif cell.kind == "train":
+        prefix = f"{cell.problem.arch}/"
+    else:
+        prefix = ""
     return f"{prefix}{cell.resolved_strategy}x{cell.delay}"
 
 
@@ -401,7 +405,63 @@ def _engine(cell: PlannedCell):
 def _execute_cell(cell: PlannedCell, caches: dict) -> CellOutcome:
     if cell.kind == "workload":
         return _execute_workload_cell(cell, caches)
+    if cell.kind == "train":
+        return _execute_train_cell(cell, caches)
     return _execute_synthetic_cell(cell, caches)
+
+
+def _train_problem(cell: PlannedCell, caches: dict):
+    from repro.train.coded import TrainProblem
+    key = ("train", id(cell.problem))
+    if key not in caches:
+        pr = cell.problem
+        caches[key] = TrainProblem(
+            arch=pr.arch, preset=pr.preset, seq_len=pr.seq_len,
+            rows_per_worker=pr.rows_per_worker, vocab=pr.vocab)
+    return caches[key]
+
+
+def _execute_train_cell(cell: PlannedCell, caches: dict) -> CellOutcome:
+    """One train-kind cell: a coded-SGD LM run through the strategy layer.
+
+    ``'uncoded'`` cells dispatch the SAME ``coded-sgd`` strategy with the
+    identity code forced — the no-redundancy baseline is the same trainer
+    minus the code, so loss curves are directly comparable.
+    """
+    from repro.runtime.strategies import get_strategy
+    pr, st = cell.problem, cell.strategy
+    base = {"strategy": cell.resolved_strategy, "delay": cell.delay,
+            "arch": pr.arch, "preset": pr.preset, "m": cell.m, "k": cell.k,
+            "seed": cell.seed}
+    if cell.skip is not None:
+        return CellOutcome(cell, {**base, "skipped": cell.skip,
+                                  "metric_name": "loss"})
+    spec_ = _train_problem(cell, caches)
+    engine = _engine(cell)
+    cfg = st.options_dict()
+    if cell.resolved_strategy == "uncoded":
+        cfg["code"] = "uncoded"     # force over any --code option
+    cfg.setdefault("policy", resolve_policy(
+        st.policy or "fastest-k", cell.m, cell.k,
+        deadline=st.deadline, beta=st.policy_beta))
+    if cell.degrade is not None:
+        cfg.setdefault("degrade", cell.degrade)
+    strat = get_strategy("coded-sgd")
+    try:
+        if cell.trials > 1:
+            result = strat.run_batched(
+                spec_, engine, steps=cell.steps, trials=cell.trials,
+                eval_every=cell.eval_every, placement=cell.placement, **cfg)
+        else:
+            result = strat.run(spec_, engine, steps=cell.steps, **cfg)
+    except ValueError as e:
+        print(f"# skipping {cell.resolved_strategy} x {cell.delay}: {e}")
+        return CellOutcome(cell, {**base, "skipped": str(e),
+                                  "metric_name": "loss"})
+    rec = result.to_record()
+    rec.update(base, metric_name="loss",
+               final_metric=rec["final_objective"])
+    return CellOutcome(cell, rec, result)
 
 
 def _synthetic_problem(cell: PlannedCell, caches: dict):
@@ -488,7 +548,7 @@ def _cellbatch_key(cell: PlannedCell):
     FREE axes — they only change the sampled schedules and the
     per-realization step vector.
     """
-    if (cell.kind == "workload" or cell.skip is not None
+    if (cell.kind in ("workload", "train") or cell.skip is not None
             or cell.placement != "vmap"
             or cell.resolved_strategy not in _CELLBATCH_STRATEGIES):
         return None

@@ -25,6 +25,16 @@ __all__ = ["PlannedCell", "ExperimentPlan", "plan"]
 SYNTHETIC_M = 16
 SYNTHETIC_STEPS = 200
 
+# train-kind defaults: a tiny coded-DP cluster and a step budget sized so a
+# smoke LM cell stays in CI territory (the example/bench drive longer runs)
+TRAIN_M = 8
+TRAIN_STEPS = 12
+
+# strategies a train-kind cell can lower to: coded-sgd natively; 'uncoded'
+# maps onto the same trainer with the identity code (the no-redundancy
+# baseline).  Everything else is a convex-problem scheme.
+_TRAIN_STRATEGIES = ("coded-sgd", "uncoded")
+
 
 def _default_k(m: int) -> int:
     return max(1, (3 * m) // 4)
@@ -118,6 +128,26 @@ def plan(spec: ExperimentSpec) -> ExperimentPlan:
                         compute_time=spec.delays.compute_time,
                         skip=wl.skip_reason(st.name),
                         metric_name=wl.metric_name,
+                        faults=spec.delays.faults, degrade=st.degrade))
+        elif pr.kind == "train":
+            steps = spec.steps if spec.steps is not None else TRAIN_STEPS
+            check_trials(steps, tr.trials, tr.eval_every)
+            m = spec.delays.m if spec.delays.m is not None else TRAIN_M
+            for delay in spec.delays.delays:
+                for st in spec.strategies:
+                    get_strategy(st.name)   # unknown name -> KeyError now
+                    skip = (None if st.name in _TRAIN_STRATEGIES else
+                            f"strategy '{st.name}' has no train-kind "
+                            f"lowering (coded-sgd/uncoded only)")
+                    cells.append(PlannedCell(
+                        index=len(cells), problem=pr, strategy=st,
+                        resolved_strategy=st.name, delay=delay, m=m,
+                        k=st.k if st.k is not None else _default_k(m),
+                        steps=steps, trials=tr.trials,
+                        eval_every=tr.eval_every, seed=tr.seed,
+                        placement=pl.mode,
+                        compute_time=spec.delays.compute_time,
+                        skip=skip, metric_name="loss",
                         faults=spec.delays.faults, degrade=st.degrade))
         else:
             steps = spec.steps if spec.steps is not None else SYNTHETIC_STEPS

@@ -12,6 +12,11 @@ cell the paper's §5 protocol needs:
         --workloads ridge,logistic --strategies coded,uncoded \\
         --trials 8 --placement sharded
 
+    # coded-SGD train matrix over the model zoo (DESIGN §15)
+    PYTHONPATH=src python -m repro.experiments.run \\
+        --train deepseek-7b --strategies coded-sgd,uncoded \\
+        --delays bimodal --code cyclic --steps 3
+
 Argv is parsed into an :class:`ExperimentSpec`, compiled with ``plan`` and
 run with ``execute`` — exactly the path the legacy ``runtime.compare`` and
 ``workloads.run`` CLIs now delegate to.  ``--plan-only`` prints the
@@ -39,7 +44,15 @@ def build_spec(args: argparse.Namespace) -> ExperimentSpec:
     """An ``ExperimentSpec`` from parsed CLI args (shared by this CLI and
     the legacy front-ends)."""
     delays = tuple(_csv_list(args.delays))
-    if args.workloads:
+    train = _csv_list(getattr(args, "train", None))
+    if train:
+        problems = tuple(
+            ProblemAxis.train(a, preset=args.preset,
+                              seq_len=getattr(args, "seq_len", 64))
+            for a in train)
+        if not delays:
+            delays = ("bimodal",)     # train cells need an explicit model
+    elif args.workloads:
         problems = tuple(ProblemAxis.from_workload(w, args.preset)
                          for w in _csv_list(args.workloads))
     else:
@@ -47,13 +60,18 @@ def build_spec(args: argparse.Namespace) -> ExperimentSpec:
                                           lam=args.lam, h=args.h),)
         if not delays:
             delays = ("bimodal", "power_law", "exponential")
+    # --code only means something to train-kind coded-sgd cells; other
+    # strategies would reject the unknown kwarg
+    code_opts = ((("code", args.code),)
+                 if train and getattr(args, "code", None) else ())
     strategies = tuple(
         StrategyAxis(name=s, encoder=args.encoder, policy=args.policy,
                      k=args.k, deadline=args.deadline,
                      policy_beta=args.policy_beta,
                      staleness_bound=args.staleness_bound,
                      async_updates=args.async_updates,
-                     degrade=getattr(args, "degrade", None))
+                     degrade=getattr(args, "degrade", None),
+                     options=code_opts)
         for s in _csv_list(args.strategies))
     # the legacy front-ends share build_spec but not the obs flags, hence
     # getattr defaults — their specs get the all-off ObsAxis
@@ -137,9 +155,20 @@ def main(argv: Sequence[str] | None = None) -> ExperimentResult:
                     help="comma list of paper-§5 workloads "
                          "(ridge/lasso/logistic/mf); omit for the "
                          "synthetic quadratic")
+    ap.add_argument("--train", default=None, metavar="ARCHS",
+                    help="comma list of model-zoo architectures to train "
+                         "with coded SGD (train-kind cells, e.g. "
+                         "'deepseek-7b'); --strategies then picks from "
+                         "coded-sgd/uncoded")
+    ap.add_argument("--code", default=None,
+                    help="gradient code for train-kind coded-sgd cells "
+                         "(frc/cyclic/stochastic/uncoded; default frc)")
+    ap.add_argument("--seq-len", type=int, default=64, dest="seq_len",
+                    help="sequence length for train-kind cells")
     ap.add_argument("--preset", default="smoke",
-                    choices=["smoke", "bench", "paper"],
-                    help="workload scale preset (with --workloads)")
+                    choices=["smoke", "bench", "paper", "100m"],
+                    help="workload scale preset (with --workloads), or the "
+                         "train preset (smoke/100m) with --train")
     # --delays defaults to unset: synthetic matrices then get the compare
     # triple (in build_spec), workload matrices their native paper models —
     # while an EXPLICIT --delays always wins, workload or not
@@ -148,10 +177,13 @@ def main(argv: Sequence[str] | None = None) -> ExperimentResult:
                     help="stack compatible matrix cells (same problem/"
                          "strategy/shape, differing delay/policy/step size) "
                          "into one compiled program (vmap placement only)")
+    from repro.runtime.faults import FAULT_PRESETS
     ap.add_argument("--faults", default=None, metavar="SPEC",
                     help="fault-injection spec layered on every delay "
                          "model, e.g. 'crash:p=0.2,at=0.5;blackout:p=0.3,"
-                         "dur=0.4;corrupt:p=0.05' (repro.runtime.faults)")
+                         "dur=0.4;corrupt:p=0.05', or a named chaos "
+                         f"preset from {sorted(FAULT_PRESETS)} as "
+                         "'preset:<name>' (repro.runtime.faults)")
     ap.add_argument("--degrade", default=None, metavar="SPEC",
                     help="sub-k degradation policy: 'renormalize' | "
                          "'hold[:shrink=S,k_min=K]' | 'backoff[:base=B,"

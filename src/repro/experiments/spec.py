@@ -44,7 +44,11 @@ class ProblemAxis:
       (arbitrary data) carried verbatim in ``problem``;
     * ``'workload'``  — a registered paper-§5 workload (ridge / lasso /
       logistic / mf) at one of its presets; the preset owns dims, cluster
-      shape, step budget and the paper metric.
+      shape, step budget and the paper metric;
+    * ``'train'``     — a neural LM from the model zoo trained with coded
+      SGD (``repro.train.TrainProblem``; DESIGN §15): ``arch`` names the
+      architecture, ``preset`` picks ``smoke``/``100m``, and the metric is
+      the decoded training loss.
     """
     kind: str = "synthetic"
     # -- synthetic fields --
@@ -58,7 +62,12 @@ class ProblemAxis:
     problem: Any = None            # a runtime.ProblemSpec instance
     # -- workload variant --
     workload: str | None = None
-    preset: str = "smoke"
+    preset: str = "smoke"          # also the train-variant preset
+    # -- train variant --
+    arch: str | None = None
+    seq_len: int = 64
+    rows_per_worker: int = 1
+    vocab: int = 512
 
     @staticmethod
     def synthetic(n: int = 512, p: int = 128, *, noise: float = 0.5,
@@ -75,13 +84,23 @@ class ProblemAxis:
     def from_workload(name: str, preset: str = "smoke") -> "ProblemAxis":
         return ProblemAxis(kind="workload", workload=name, preset=preset)
 
+    @staticmethod
+    def train(arch: str = "deepseek-7b", *, preset: str = "smoke",
+              seq_len: int = 64, rows_per_worker: int = 1,
+              vocab: int = 512) -> "ProblemAxis":
+        return ProblemAxis(kind="train", arch=arch, preset=preset,
+                           seq_len=seq_len, rows_per_worker=rows_per_worker,
+                           vocab=vocab)
+
     def validate(self) -> None:
-        if self.kind not in ("synthetic", "spec", "workload"):
+        if self.kind not in ("synthetic", "spec", "workload", "train"):
             raise ValueError(f"unknown ProblemAxis kind '{self.kind}'")
         if self.kind == "workload" and not self.workload:
             raise ValueError("workload ProblemAxis needs a workload name")
         if self.kind == "spec" and self.problem is None:
             raise ValueError("spec ProblemAxis needs a ProblemSpec instance")
+        if self.kind == "train" and not self.arch:
+            raise ValueError("train ProblemAxis needs an arch name")
 
 
 @dataclasses.dataclass(frozen=True)

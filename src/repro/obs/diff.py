@@ -63,6 +63,12 @@ def _build_parser() -> argparse.ArgumentParser:
     return ap
 
 
+def _ensure_parent(path: str) -> None:
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+
+
 def _store(args) -> RunStore:
     root = args.store or os.environ.get(ENV_VAR) or DEFAULT_ROOT
     return RunStore(root)
@@ -124,12 +130,14 @@ def main(argv=None) -> int:
 
     print(report.render_text())
     if args.json_out:
+        _ensure_parent(args.json_out)
         with open(args.json_out, "w") as f:
             json.dump(report.to_dict(), f, indent=1)
     if args.html_out:
         page = render_html_page(
             f"repro diff: {report.a_label} vs {report.b_label}",
             [report.render_html_section()])
+        _ensure_parent(args.html_out)
         with open(args.html_out, "w") as f:
             f.write(page)
     return report.exit_code

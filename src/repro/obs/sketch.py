@@ -261,6 +261,14 @@ class DelayTailEstimator:
         self._ewma = [Ewma(alpha) for _ in range(self.m)]
         self._tail = [QuantileSketch(self.PERCENTILES, buffer_size)
                       for _ in range(self.m)]
+        # fault sensing (PR 9 follow-up): counts from faulted schedules so
+        # the adaptive-k controller can tell a fat delay tail from genuine
+        # failures (a crash wants more redundancy, a tail wants a smaller k)
+        self._fault_schedules = 0
+        self._crashes = 0
+        self._blackouts = 0
+        self._blackout_s = 0.0
+        self._corrupt = 0
 
     def observe(self, worker: int, delay: float) -> None:
         self._ewma[worker].update(delay)
@@ -274,9 +282,22 @@ class DelayTailEstimator:
             self.observe(i, a[i] - float(start))
 
     def observe_schedule(self, sched) -> None:
-        """Feed a realized ``runtime.engine.Schedule``."""
+        """Feed a realized ``runtime.engine.Schedule`` — delay tails from
+        its barrier events plus, for faulted schedules, the realized
+        crash/blackout/corrupt counts (``fault_metrics`` in-stream)."""
         for ev in sched.events:
             self.observe_iteration(ev.start, ev.arrivals)
+        if getattr(sched, "failed", None) is not None:
+            self._fault_schedules += 1
+        for fe in getattr(sched, "fault_events", ()) or ():
+            kind = getattr(fe, "kind", None)
+            if kind == "crash":
+                self._crashes += 1
+            elif kind == "blackout":
+                self._blackouts += 1
+                self._blackout_s += float(getattr(fe, "duration", 0.0))
+            elif kind == "corrupt":
+                self._corrupt += 1
 
     def observe_async(self, trace) -> None:
         """Feed a realized ``runtime.engine.AsyncTrace``: each worker's
@@ -309,4 +330,11 @@ class DelayTailEstimator:
         p99 = [v for v in out["p99"] if v is not None]
         out["p99_max"] = max(p99) if p99 else None
         out["p99_mean"] = float(np.mean(p99)) if p99 else None
+        if self._fault_schedules:
+            # gated: clean-path snapshots keep their historical key set
+            out["faults"] = {"schedules": self._fault_schedules,
+                             "crashes": self._crashes,
+                             "blackouts": self._blackouts,
+                             "blackout_s": self._blackout_s,
+                             "corrupt": self._corrupt}
         return out

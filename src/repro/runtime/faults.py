@@ -35,6 +35,17 @@ Spec strings (the ``--faults`` / ``--degrade`` CLI surface)::
     corrupt:p=0.05                each arrival iid w.p. p is corrupt
     crash:p=0.2,at=0.5;corrupt:p=0.01      compose with ';'
 
+    preset:<name>                 named chaos preset (``FAULT_PRESETS``):
+      preset:ec2-tail             recurring short blackouts + rare corrupt
+                                  arrivals — the EC2 delay-tail chaos the
+                                  paper's wall-clocks were measured under
+      preset:zone-outage          a correlated zone (workers 0-3) down for a
+                                  window + an independent crash per worker
+      preset:flaky-rack           one rack (workers 0-1) in periodic
+                                  blackout with corrupt re-arrivals
+    Presets expand to ordinary chunks and compose with them:
+    ``preset:ec2-tail;crash:p=0.1,at=0.8`` is valid.
+
     renormalize                   DegradePolicy (default)
     hold:shrink=0.5               reuse last gradient at half step below k
     backoff:base=0.05,retries=4   deadline extension, capped exponential
@@ -51,7 +62,7 @@ __all__ = [
     "FAULT_OK", "FAULT_CRASHED", "FAULT_BLACKOUT", "FAULT_CORRUPT",
     "FAULT_KINDS", "FaultEvent", "CrashFault", "BlackoutFault", "ZoneFault",
     "CorruptionFault", "FaultModel", "FaultRealization", "make_fault_model",
-    "DegradePolicy", "DEGRADE_MODES", "make_degrade",
+    "FAULT_PRESETS", "DegradePolicy", "DEGRADE_MODES", "make_degrade",
 ]
 
 # ``Schedule.failed`` codes.  OK covers both "active" and "healthy but
@@ -168,6 +179,21 @@ class CorruptionFault:
 
 _INJECTORS = {"crash": CrashFault, "blackout": BlackoutFault,
               "zone": ZoneFault, "corrupt": CorruptionFault}
+
+# Named chaos presets for the workload zoo (``--faults preset:<name>``);
+# each expands to ordinary spec chunks, so presets compose with explicit
+# injectors and with each other via ';'.
+FAULT_PRESETS = {
+    # the EC2 delay-tail story (paper §5): machines fall out for short
+    # recurring windows and an occasional arrival is garbage
+    "ec2-tail": "blackout:p=0.3,at=0.4,dur=0.4,period=2.5;corrupt:p=0.02",
+    # a correlated availability-zone outage plus independent attrition
+    "zone-outage": "zone:workers=0-3,at=0.6,dur=1.5;crash:p=0.1,at=1.0",
+    # one flaky rack: periodic blackout of a fixed pair with corrupt
+    # re-arrivals as it flaps
+    "flaky-rack": "zone:workers=0-1,at=0.2,dur=0.3;"
+                  "blackout:p=0.15,at=0.8,dur=0.4,period=3.0;corrupt:p=0.05",
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -290,10 +316,21 @@ def make_fault_model(spec) -> FaultModel | None:
     if not spec or spec in ("none", "0"):
         return None
     injectors = []
+    chunks = []
     for chunk in spec.split(";"):
         chunk = chunk.strip()
         if not chunk:
             continue
+        name, _, arg = chunk.partition(":")
+        if name.strip() == "preset":
+            key = arg.strip()
+            if key not in FAULT_PRESETS:
+                raise KeyError(f"unknown fault preset '{key}'; have "
+                               f"{sorted(FAULT_PRESETS)}")
+            chunks.extend(p.strip() for p in FAULT_PRESETS[key].split(";"))
+        else:
+            chunks.append(chunk)
+    for chunk in chunks:
         name, _, argstr = chunk.partition(":")
         name = name.strip()
         if name not in _INJECTORS:

@@ -728,6 +728,44 @@ class CodedBCD(_SyncGradientStrategy):
 
 
 # ---------------------------------------------------------------------------
+# Coded SGD on the neural model zoo (train-kind cells; DESIGN §15)
+# ---------------------------------------------------------------------------
+
+@register_strategy("coded-sgd")
+class CodedSGD(Strategy):
+    """Gradient-coded data-parallel SGD training a real LM (train/coded.py).
+
+    ``spec`` is a ``repro.train.TrainProblem`` (not a ``ProblemSpec``);
+    the ``objective`` trace is the decoded training loss, times come from
+    the engine schedule.  cfg: code ("frc" | "cyclic" | "stochastic" |
+    "uncoded"), beta, policy/k, lr, warmup, degrade, log_every.  The train
+    module is imported lazily so registry load never pulls the model zoo.
+    """
+
+    def run(self, spec, engine, *, steps=100, **cfg):
+        from repro.train.coded import run_coded_sgd
+        return run_coded_sgd(spec, engine, steps=steps, **cfg)
+
+    def run_batched(self, spec, engine, *, steps=100, trials=1, eval_every=1,
+                    placement="vmap", **cfg):
+        """Sequential trial loop (each trial jit-caches the same step
+        program); the base implementation would stack the absent iterate."""
+        check_trials(steps, trials, eval_every)
+        stride_every = resolve_eval_every(steps, eval_every)
+        results = [self.run(spec, engine.trial(r), steps=steps, **dict(cfg))
+                   for r in range(trials)]
+        stride = slice(stride_every - 1, None, stride_every)
+        return TrialsResult(
+            strategy=self.name,
+            times=np.stack([np.asarray(r.times) for r in results])[:, stride],
+            objective=np.stack([np.asarray(r.objective)
+                                for r in results])[:, stride],
+            w=None,
+            meta={**results[0].meta, "trials": trials,
+                  "eval_every": eval_every, "batched": False})
+
+
+# ---------------------------------------------------------------------------
 # Asynchronous stale-gradient SGD (the missing baseline from the abstract)
 # ---------------------------------------------------------------------------
 

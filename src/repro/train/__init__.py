@@ -1,2 +1,4 @@
 from .steps import build_train_step, build_prefill_step, build_decode_step
+from .coded import (CodedTrainer, TrainProblem, build_coded_train_step,
+                    run_coded_sgd)
 from .trainer import Trainer, TrainerConfig

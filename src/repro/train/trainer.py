@@ -1,102 +1,44 @@
-"""Training loop with coded data parallelism + straggler simulation.
+"""Legacy-facing trainer API, now a thin adapter over ``train.coded``.
 
-The host-side loop per iteration (mirrors paper Algorithm 1):
-  1. sample per-worker delays from the configured DelayModel,
-  2. take the fastest-k active set A_t, build the erasure mask,
-  3. fetch the FRC-coded batch + decode weights from the data pipeline,
-  4. run the jitted coded train step (masked, rescaled gradient),
-  5. account simulated wall-clock as the k-th order statistic.
+Through PR 9 this module owned a self-contained loop: it sampled its own
+per-step delays from ``core.straggler``, took fastest-k, and accounted
+wall-clock with a private ``WallClock`` — a parallel universe to the
+``ClusterEngine`` every other strategy runs on.  DESIGN §15's migration
+table maps the old loop onto the new subsystem:
 
-Runs unsharded on CPU (tests/examples) or under a mesh via pjit shardings.
+    legacy (PR 0-9)                     now
+    ---------------------------------   ----------------------------------
+    core.straggler delay sampling       ClusterEngine.sample_schedule
+    fastest_k + active_mask per step    ActiveSetPolicy (FastestK(wait_k))
+    WallClock.tick k-th order stat      Schedule.times (engine-accounted)
+    CodedBatcher weight folding         GroupBatcher + code.decode_weights
+    lm_loss weight-normalized CE        fixed-denominator CE (exact decode)
+    no faults / no obs / no store       --faults, CompileWatch, runstore
+
+``Trainer(cfg, tcfg, delay_model=...)`` keeps the historical signature for
+tests/examples: it builds the engine + policy from the config and defers to
+:class:`repro.train.coded.CodedTrainer` (same ``run()`` return shape; the
+history records additionally carry active/exact/compile-split fields).
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Callable, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+from typing import Optional
 
 from ..configs.base import ArchConfig
-from ..core.gradient_coding import FRCode, make_frc
-from ..core.straggler import DelayModel, constant_delays, fastest_k, \
-    active_mask, WallClock
-from ..data.pipeline import CodedBatcher, TokenStream
-from ..optim import adamw_init, cosine_schedule
-from .steps import build_train_step
+from ..core.straggler import DelayModel, constant_delays
+from ..runtime.engine import ClusterEngine, FastestK
+from .coded import CodedTrainer, TrainerConfig
 
 __all__ = ["TrainerConfig", "Trainer"]
 
 
-@dataclasses.dataclass
-class TrainerConfig:
-    m_workers: int = 8            # coded-DP worker shards
-    beta: int = 2                 # FRC replication factor
-    wait_k: int = 6               # fastest-k the master waits for
-    rows_per_worker: int = 1
-    seq_len: int = 128
-    steps: int = 100
-    lr: float = 3e-4
-    warmup: int = 20
-    seed: int = 0
-    checkpoint_dir: Optional[str] = None
-    checkpoint_every: int = 0
-    log_every: int = 10
-    uncoded: bool = False         # baseline: no redundancy (beta=1)
+class Trainer(CodedTrainer):
+    """Back-compat constructor: delay model in, engine-driven loop out."""
 
-
-class Trainer:
     def __init__(self, cfg: ArchConfig, tcfg: TrainerConfig,
                  delay_model: Optional[DelayModel] = None):
-        self.cfg, self.tcfg = cfg, tcfg
-        beta = 1 if tcfg.uncoded else tcfg.beta
-        self.code: FRCode = make_frc(tcfg.m_workers, beta)
-        self.stream = TokenStream(cfg.vocab, seed=tcfg.seed)
-        self.batcher = CodedBatcher(self.stream, self.code,
-                                    tcfg.rows_per_worker, tcfg.seq_len,
-                                    seed=tcfg.seed)
-        self.delay_model = delay_model or constant_delays(0.0)
-        self.rng = np.random.default_rng(tcfg.seed)
-        lr_fn = cosine_schedule(tcfg.lr, tcfg.warmup, tcfg.steps)
-        self._step = jax.jit(build_train_step(cfg, lr_fn))
-        self.clock = WallClock(compute_time=0.05)
-
-    def init_state(self, key=None):
-        from ..models import transformer as T
-        key = key if key is not None else jax.random.key(self.tcfg.seed)
-        params = T.init_params(self.cfg, key)
-        opt = adamw_init(params, dtype=jnp.dtype(self.cfg.optstate_dtype))
-        return params, opt
-
-    def run(self, params=None, opt=None, callback: Optional[Callable] = None):
-        if params is None:
-            params, opt = self.init_state()
-        tc = self.tcfg
-        history = []
-        for t in range(tc.steps):
-            delays = self.delay_model(self.rng, tc.m_workers)
-            A = fastest_k(delays, tc.wait_k)
-            mask = active_mask(tc.m_workers, A)
-            tokens, labels, weights = self.batcher.next_batch(mask)
-            batch = {"tokens": jnp.asarray(tokens),
-                     "labels": jnp.asarray(labels),
-                     "weights": jnp.asarray(weights)}
-            params, opt, metrics = self._step(params, opt, batch)
-            elapsed = self.clock.tick(delays, tc.wait_k)
-            rec = {"step": t, "loss": float(metrics["loss"]),
-                   "grad_norm": float(metrics["grad_norm"]),
-                   "sim_time_s": elapsed}
-            history.append(rec)
-            if callback:
-                callback(rec)
-            if tc.log_every and t % tc.log_every == 0:
-                print(f"step {t:5d} loss {rec['loss']:.4f} "
-                      f"gnorm {rec['grad_norm']:.3f} "
-                      f"simtime {elapsed:.1f}s", flush=True)
-            if (tc.checkpoint_dir and tc.checkpoint_every
-                    and (t + 1) % tc.checkpoint_every == 0):
-                from ..checkpoint import save
-                save(tc.checkpoint_dir, t + 1, (params, opt))
-        return params, opt, history
+        engine = ClusterEngine(delay_model or constant_delays(0.0),
+                               tcfg.m_workers, compute_time=0.05,
+                               seed=tcfg.seed)
+        super().__init__(cfg, tcfg, engine,
+                         policy=FastestK(tcfg.wait_k))
